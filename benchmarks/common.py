@@ -1,0 +1,99 @@
+"""Shared benchmark infrastructure: cached trained SLMs + eval metrics.
+
+Absolute WikiText numbers need the original pretrained checkpoints (not
+available offline); the benchmarks therefore train small same-family models
+on the deterministic synthetic corpus and validate the paper's RELATIVE
+claims (method orderings, noise robustness, rho trade-off, system ratios).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.models.config import ModelConfig
+from repro.models.model import forward, init_params
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, train
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "bench_models")
+
+# Small same-family stand-ins for the paper's evaluation SLMs.
+BENCH_MODELS = {
+    "qwen-like-dense": ModelConfig(
+        name="qwen-like-dense", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=2, d_ff=512, vocab=512, qkv_bias=True),
+    "hymba-like-hybrid": ModelConfig(
+        name="hymba-like-hybrid", family="hybrid", n_layers=2, d_model=192,
+        n_heads=6, n_kv_heads=2, d_ff=384, vocab=512,
+        pattern=("hybrid", "hybrid_local"), window=32,
+        d_state=16, ssm_headdim=32),
+    "mamba-like-ssm": ModelConfig(
+        name="mamba-like-ssm", family="ssm", n_layers=4, d_model=192,
+        n_heads=0, n_kv_heads=0, head_dim=1, d_ff=0, vocab=512,
+        pattern=("mamba",), d_state=16, ssm_headdim=32),
+}
+
+TRAIN_STEPS = 300
+
+
+def get_trained(name: str) -> Tuple[ModelConfig, Dict, SyntheticCorpus]:
+    """Train (or load cached) a benchmark SLM."""
+    cfg = BENCH_MODELS[name]
+    corpus = SyntheticCorpus(CorpusConfig(vocab=cfg.vocab, seed=41))
+    ckdir = os.path.join(ART, name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    if ckpt_lib.latest_step(ckdir) == TRAIN_STEPS:
+        restored, _ = ckpt_lib.restore(
+            jax.eval_shape(lambda: {"params": params}), ckdir)
+        return cfg, restored["params"], corpus
+    tc = TrainConfig(steps=TRAIN_STEPS, global_batch=16, seq_len=64,
+                     log_every=100, warmup=20, seed=40)
+    out = train(cfg, tc, AdamWConfig(lr=2e-3), log_fn=lambda s: None)
+    os.makedirs(ckdir, exist_ok=True)
+    ckpt_lib.save({"params": out["params"]}, ckdir, TRAIN_STEPS)
+    return cfg, out["params"], SyntheticCorpus(
+        CorpusConfig(vocab=cfg.vocab, seed=41))
+
+
+def heldout_ppl(cfg: ModelConfig, params, corpus: SyntheticCorpus,
+                n_batches: int = 4) -> float:
+    tot, cnt = 0.0, 0
+    for b in corpus.heldout_ppl_batches(n_batches, 16, 64):
+        logits, _, _ = forward(cfg, params, jnp.asarray(b["tokens"]))
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(
+            logits, jnp.asarray(b["labels"])[..., None], -1)[..., 0]
+        tot += float(jnp.sum(lse - gold))
+        cnt += b["labels"].size
+    return float(np.exp(tot / cnt))
+
+
+def cloze_accuracy(cfg: ModelConfig, params, corpus: SyntheticCorpus,
+                   n: int = 64) -> float:
+    """Synthetic 'reasoning' probe: recall the document's topic marker."""
+    probe = corpus.cloze_batch(n, seq=48)
+    logits, _, _ = forward(cfg, params, jnp.asarray(probe["tokens"]))
+    pred = np.asarray(jnp.argmax(logits[:, -1], -1))
+    return float((pred == probe["answers"]).mean())
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *a):
+        self.us = (time.monotonic() - self.t0) * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.0f},{derived}")

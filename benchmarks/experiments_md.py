@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python -m benchmarks.experiments_md > tables.md
+(The narrative sections of EXPERIMENTS.md are hand-written; this module
+keeps the big tables reproducible.)
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _load(d):
+    out = []
+    for p in sorted(glob.glob(os.path.join(ROOT, "artifacts", d,
+                                           "*.json"))):
+        out.append(json.load(open(p)))
+    return out
+
+
+def dryrun_table() -> str:
+    recs = _load("dryrun")
+    lines = ["| arch | shape | mesh | status | compile s | HLO coll. ops |"
+             " arg GiB/dev | temp GiB/dev |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"], x["mesh"])):
+        mem = r.get("memory", {})
+        chips = 512 if "2x16" in r["mesh"] else 256
+        arg = mem.get("argument_bytes", 0) / 1024 ** 3
+        tmp = mem.get("temp_bytes", 0) / 1024 ** 3
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'OK' if r.get('ok') else 'FAIL'} | "
+            f"{r.get('compile_s', 0):.1f} | "
+            f"{r.get('collectives', {}).get('count', 0)} | "
+            f"{arg:.2f} | {tmp:.2f} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = [r for r in _load("dryrun_cal") if r.get("ok")]
+    lines = ["| arch | shape | t_compute s | t_memory s | t_collective s |"
+             " bottleneck | MODEL_FLOPS/HLO | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda x: (x["arch"], x["shape"])):
+        f = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {f['t_compute']:.3e} | "
+            f"{f['t_memory']:.3e} | {f['t_collective']:.3e} | "
+            f"{f['bottleneck']} | {f['useful_flops_ratio']:.3f} | "
+            f"{f['roofline_fraction']:.4f} |")
+    return "\n".join(lines)
+
+
+def hillclimb_tables() -> str:
+    out = []
+    for p in sorted(glob.glob(os.path.join(ROOT, "artifacts", "hillclimb",
+                                           "*.json"))):
+        rec = json.load(open(p))
+        out.append(f"\n**{rec['cell']}** "
+                   f"({rec['plan']['arch']} × {rec['plan']['shape']}, "
+                   f"weights={rec['plan']['serve_weights']})\n")
+        out.append("| variant | t_compute | t_memory | t_collective |"
+                   " roofline frac |")
+        out.append("|---|---|---|---|---|")
+        for v, r in rec["results"].items():
+            f = r.get("roofline")
+            if not f:
+                out.append(f"| {v} | — | — | — | {r.get('error')} |")
+                continue
+            out.append(f"| {v} | {f['t_compute']:.3e} | "
+                       f"{f['t_memory']:.3e} | {f['t_collective']:.3e} | "
+                       f"{f['roofline_fraction']:.4f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single pod, calibrated)\n")
+    print(roofline_table())
+    print("\n## Hillclimb tables\n")
+    print(hillclimb_tables())

@@ -1,0 +1,59 @@
+"""Paper Fig. 4: system energy / latency / memory for Hymba-1.5B.
+
+FP16 / RTN / AWQ / GPTQ / MXINT4 on the Jetson-class LPDDR5 system vs QMC
+(2/3-bit MLC) on the heterogeneous NVM system. Targets: ~11x energy,
+~12.5x latency, 6.3-7.3x memory cells vs FP16; ~2-3x vs AWQ/GPTQ.
+"""
+from __future__ import annotations
+
+from benchmarks.common import Timer, emit
+from repro.configs import get_config
+from repro.core.qconfig import QMCConfig
+from repro.memsys import (MemSystemConfig, dse, evaluate_conventional,
+                          evaluate_hetero, make_traffic)
+
+SEQ = 1024
+
+
+def run(arch="hymba-1.5b"):
+    cfg = get_config(arch)
+    sys_cfg = MemSystemConfig()
+    rows = {}
+    with Timer() as t:
+        for m in ("fp16", "rtn4", "awq", "gptq", "mx4"):
+            legacy = m == "fp16"
+            rows[m] = evaluate_conventional(
+                make_traffic(cfg, m, seq_len=SEQ, legacy_flash=legacy),
+                sys_cfg, legacy_flash=legacy)
+        for cell_bits, name in ((3, "qmc_3bit"), (2, "qmc_2bit")):
+            qc = QMCConfig(rho=0.3, cell_bits=cell_bits)
+            traffic = make_traffic(cfg, "qmc", seq_len=SEQ, qmc=qc)
+            rows[name] = evaluate_hetero(traffic,
+                                         dse(traffic, cell_bits=cell_bits))
+    base = rows["fp16"]
+    for name, r in rows.items():
+        emit(f"fig4/{arch}/{name}", t.us / len(rows),
+             f"energy_mJ={r.energy_j*1e3:.2f};latency_ms="
+             f"{r.latency_s*1e3:.3f};cells_MBeq="
+             f"{r.capacity_cells/8/1024**2:.0f};"
+             f"vs_fp16_energy={base.energy_j/r.energy_j:.2f}x;"
+             f"vs_fp16_latency={base.latency_s/r.latency_s:.2f}x;"
+             f"vs_fp16_cells={base.capacity_cells/r.capacity_cells:.2f}x")
+    # weights-only energy view (paper's 10.98x counts the weight path)
+    t_fp = make_traffic(cfg, "fp16", seq_len=SEQ)
+    qc = QMCConfig(rho=0.3, cell_bits=3)
+    t_q = make_traffic(cfg, "qmc", seq_len=SEQ, qmc=qc)
+    from repro.memsys import devices as dv
+    e_fp = t_fp.weight_bits * (dv.LPDDR5.read_energy_pj_per_bit
+                               + dv.E_NETWORK_PJ_PER_BIT)
+    e_q = (t_q.weight_bits_inlier * (dv.RERAM_3B.read_energy_pj_per_bit
+                                     + dv.E_NETWORK_PJ_PER_BIT)
+           + t_q.weight_bits_outlier * (dv.MRAM.read_energy_pj_per_bit
+                                        + dv.E_NETWORK_PJ_PER_BIT))
+    emit(f"fig4/{arch}/weights_only_energy", 0,
+         f"vs_fp16={e_fp/e_q:.2f}x (paper: 10.98x)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Hardware-adaptation ablation: scalar (paper-faithful) vs (8,128)-subtile
+
+(TPU deployment) outlier granularity at equal average bits — quantifies the
+accuracy cost of restructuring Eq. 1 for TPU vector memory (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import Timer, emit, get_trained, heldout_ppl
+from repro.core.apply import quantize_model
+from repro.core.qconfig import QMCConfig
+
+
+def run(models=("qwen-like-dense", "hymba-like-hybrid")):
+    rows = []
+    for mname in models:
+        cfg, params, corpus = get_trained(mname)
+        ppl_fp = heldout_ppl(cfg, params, corpus)
+        for rho in (0.1, 0.3):
+            for gran in ("scalar", "subtile"):
+                qc = QMCConfig(rho=rho, granularity=gran)
+                with Timer() as t:
+                    q = quantize_model(params, "qmc", qmc=qc, min_dim=64)
+                    ppl = heldout_ppl(cfg, q, corpus)
+                emit(f"granularity/{mname}/rho{rho}/{gran}", t.us,
+                     f"ppl={ppl:.3f};fp16={ppl_fp:.3f};"
+                     f"delta_vs_fp16={ppl - ppl_fp:+.3f}")
+                rows.append((mname, rho, gran, ppl))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: qmm (dual-stream dequant matmul) and unpack3b.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+wall-clock numbers are NOT TPU performance — the meaningful derived metrics
+are the XLA-fallback throughput and the kernel's VMEM working set / bytes
+streamed per tile (the structural quantities the TPU roofline uses).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.packing import pack_codes
+from repro.core.qconfig import QMCConfig
+from repro.core.qtensor import quantize_qtensor
+from repro.kernels import ops
+from repro.kernels.ref import qmm_ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def run():
+    cfgq = QMCConfig(rho=0.3, granularity="subtile")
+    for m, k, n in ((128, 512, 512), (256, 1024, 1024)):
+        w = jax.random.normal(jax.random.PRNGKey(0), (k, n))
+        x = jax.random.normal(jax.random.PRNGKey(1), (m, k),
+                              dtype=jnp.bfloat16)
+        qt = quantize_qtensor(w, cfgq)
+        ref = jax.jit(lambda a, q=qt: qmm_ref(a, q))
+        us_ref = _time(ref, x)
+        flops = 2 * m * k * n
+        # structural kernel quantities (per 128x128x128 tile step)
+        vmem_kb = (128 * 128 * 4 + 2 * 8 * 128 + 2 * 128 * 4
+                   + 128 * 128 * 4) / 1024
+        bytes_w_packed = qt.nbytes_container()
+        bytes_w_bf16 = k * n * 2
+        emit(f"kernels/qmm_{m}x{k}x{n}/xla_ref", us_ref,
+             f"gflops={flops/us_ref/1e3:.2f};"
+             f"w_bytes_packed={bytes_w_packed};w_bytes_bf16={bytes_w_bf16};"
+             f"stream_reduction={bytes_w_bf16/bytes_w_packed:.2f}x;"
+             f"vmem_per_step_kb={vmem_kb:.0f}")
+    # interpret-mode correctness timing (not perf) on one small shape
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, 256))
+    qt = quantize_qtensor(w, cfgq)
+    t0 = time.monotonic()
+    y = ops.qmm(x, qt, use_pallas=True)
+    us = (time.monotonic() - t0) * 1e6
+    err = float(jnp.max(jnp.abs(y - qmm_ref(x, qt))))
+    emit("kernels/qmm_128x256x256/pallas_interpret", us,
+         f"max_err_vs_ref={err:.2e};mode=interpret(correctness-only)")
+
+    codes = np.random.default_rng(0).integers(-4, 4, size=65536)
+    packed = jnp.asarray(pack_codes(codes, 3))
+    ref3 = jax.jit(lambda p: ops.unpack3b(p, 65536))
+    us3 = _time(ref3, packed)
+    emit("kernels/unpack3b_65536/xla_ref", us3,
+         f"codes_per_s={65536/us3*1e6:.3g};"
+         f"bytes_in={packed.nbytes};bytes_out={65536*4}")
+
+
+if __name__ == "__main__":
+    run()

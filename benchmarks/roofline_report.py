@@ -1,0 +1,44 @@
+"""Render the roofline table from the dry-run artifacts (§Roofline input)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_records(mesh: str = None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(p))
+        if r.get("ok") and (mesh is None or r["mesh"] == mesh):
+            recs.append(r)
+    return recs
+
+
+def run():
+    recs = load_records()
+    if not recs:
+        emit("roofline/none", 0, "no dry-run artifacts; run "
+             "python -m repro.launch.dryrun --all first")
+        return []
+    for r in recs:
+        roof = r["roofline"]
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+             + (f"/{r['serve_weights']}" if "decode" in r["shape"]
+                or "500k" in r["shape"] else ""),
+             r.get("compile_s", 0) * 1e6,
+             f"t_compute={roof['t_compute']:.3e}s;"
+             f"t_memory={roof['t_memory']:.3e}s;"
+             f"t_collective={roof['t_collective']:.3e}s;"
+             f"bottleneck={roof['bottleneck']};"
+             f"useful_flops_ratio={roof['useful_flops_ratio']:.3f};"
+             f"roofline_fraction={roof['roofline_fraction']:.4f}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

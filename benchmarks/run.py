@@ -1,0 +1,42 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2 fig4
+
+Each row prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (fig3, fig4, granularity, kernels,
+                            roofline_report, table2, table3, table4)
+    suites = {
+        "table2": table2.run,       # FP16/RTN/MXINT4/QMC quality
+        "table3": table3.run,       # AWQ/GPTQ/QMC(no-noise)
+        "fig3": fig3.run,           # rho sweep: PPL + energy/latency
+        "fig4": fig4.run,           # system energy/latency/memory
+        "table4": table4.run,       # co-design vs eMEMs
+        "granularity": granularity.run,    # scalar vs subtile ablation
+        "kernels": kernels.run,     # qmm + unpack3b microbench
+        "roofline": roofline_report.run,   # dry-run roofline table
+    }
+    wanted = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in wanted:
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failed.append(name)
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,162 @@
+"""Sharded, atomic, async checkpointing (no external deps).
+
+Layout:  <dir>/step_<N>/
+           index.msgpack   — pytree structure, leaf shapes/dtypes, step
+           shard_<i>.npz   — leaf arrays, chunked ~512MB per file
+         <dir>/LATEST      — atomic pointer (written last)
+
+Restores onto ANY mesh: leaves are saved unsharded (gathered via
+jax.device_get on addressable shards) and resharded on load by the caller's
+shardings — this is the elastic-restart path (checkpoint written on 512
+chips restores on 256, 8, or 1).
+
+Async: `save_async` snapshots to host memory synchronously (cheap) and
+writes in a daemon thread so training continues during I/O.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+_MAX_SHARD_BYTES = 512 * 1024 * 1024
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "name"):
+                parts.append(str(p.name))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append(("/".join(parts), leaf))
+    return out, treedef
+
+
+def save(tree, directory: str, step: int) -> str:
+    flat, _ = _flatten(tree)
+    host = {k: np.asarray(jax.device_get(v)) for k, v in flat}
+    return _write(host, directory, step)
+
+
+def _write(host: Dict[str, np.ndarray], directory: str, step: int) -> str:
+    stepdir = os.path.join(directory, f"step_{step}")
+    tmpdir = stepdir + ".tmp"
+    os.makedirs(tmpdir, exist_ok=True)
+
+    index = {"step": step, "leaves": {}, "shards": 0}
+    shard: Dict[str, np.ndarray] = {}
+    size = 0
+    shard_id = 0
+
+    def flush():
+        nonlocal shard, size, shard_id
+        if not shard:
+            return
+        np.savez(os.path.join(tmpdir, f"shard_{shard_id}.npz"), **shard)
+        shard, size = {}, 0
+        shard_id += 1
+
+    for key, arr in sorted(host.items()):
+        if size + arr.nbytes > _MAX_SHARD_BYTES and shard:
+            flush()
+        safe = key.replace("/", "§")
+        shard[safe] = arr
+        index["leaves"][key] = {"shard": shard_id,
+                                "dtype": str(arr.dtype),
+                                "shape": list(arr.shape)}
+        size += arr.nbytes
+    flush()
+    index["shards"] = shard_id
+    with open(os.path.join(tmpdir, "index.msgpack"), "wb") as f:
+        f.write(msgpack.packb(index))
+    if os.path.exists(stepdir):
+        import shutil
+        shutil.rmtree(stepdir)
+    os.rename(tmpdir, stepdir)                    # atomic publish
+    latest_tmp = os.path.join(directory, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
+    return stepdir
+
+
+class AsyncCheckpointer:
+    """Snapshot-on-call, write-in-background. One outstanding write."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[str] = None
+
+    def save(self, tree, directory: str, step: int):
+        self.wait()
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat}
+
+        def run():
+            self.last_path = _write(host, directory, step)
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore(tree_like, directory: str, step: Optional[int] = None,
+            shardings=None):
+    """Load into the structure of `tree_like` (shapes must match).
+
+    `shardings`: optional matching tree of NamedShardings — leaves are
+    device_put with them (elastic re-shard onto the current mesh).
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    stepdir = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(stepdir, "index.msgpack"), "rb") as f:
+        index = msgpack.unpackb(f.read())
+
+    cache: Dict[int, Any] = {}
+
+    def get_arr(key: str) -> np.ndarray:
+        meta = index["leaves"][key]
+        sid = meta["shard"]
+        if sid not in cache:
+            cache[sid] = np.load(os.path.join(stepdir, f"shard_{sid}.npz"))
+        return cache[sid][key.replace("/", "§")]
+
+    flat, treedef = _flatten(tree_like)
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat))
+    out = []
+    for (key, ref), shd in zip(flat, shard_flat):
+        arr = get_arr(key)
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None
+                   else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,16 @@
+"""QMC core: outlier-aware robust quantization (paper's primary contribution)."""
+from repro.core.qconfig import (AWQConfig, GPTQConfig, MXConfig, NoiseModel,
+                                QMCConfig, RTNConfig)
+from repro.core.qmc import (QMCResult, apply_reram_noise, qmc_fake_quant,
+                            qmc_quantize, quantization_mse)
+from repro.core.qtensor import (QTensor, dequantize_qtensor, qmatmul_ref,
+                                quantize_qtensor)
+from repro.core.apply import model_bits_per_weight, quantize_model
+
+__all__ = [
+    "AWQConfig", "GPTQConfig", "MXConfig", "NoiseModel", "QMCConfig",
+    "RTNConfig", "QMCResult", "apply_reram_noise", "qmc_fake_quant",
+    "qmc_quantize", "quantization_mse", "QTensor", "dequantize_qtensor",
+    "qmatmul_ref", "quantize_qtensor", "model_bits_per_weight",
+    "quantize_model",
+]

@@ -1,0 +1,179 @@
+"""Model-level quantization: walk a parameter pytree and quantize the
+
+matmul weights with a chosen method. This is the public PTQ entry point:
+
+    qparams = quantize_model(params, method="qmc", qmc=QMCConfig(...))
+
+Methods
+-------
+fp16        identity (baseline)
+rtn4        rounding-to-nearest INT4 (per-out-channel abs-max)
+mx4         MXINT4 microscaling
+qmc         Algorithm 1, scalar granularity (paper-faithful), fake-quant
+qmc_subtile Algorithm 1, (8,128)-subtile granularity (TPU variant), fake-quant
+gptq        GPTQ (requires `taps`: captured per-layer inputs)
+awq         AWQ (requires `taps`)
+qtensor     QMC-TPU deployment format: leaves become QTensor pytrees
+
+Leaf selection: 2-D (or batched 3-D, e.g. MoE experts [E, din, dout]) float
+leaves with min(last two dims) >= min_dim, excluding embedding/norm-style
+parameters by path name.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.awq import awq_quantize
+from repro.core.gptq import gptq_quantize
+from repro.core.mx import mx_fake_quant
+from repro.core.qconfig import (AWQConfig, GPTQConfig, MXConfig, QMCConfig,
+                                RTNConfig)
+from repro.core.qmc import qmc_fake_quant
+from repro.core.qtensor import quantize_qtensor
+from repro.core.quantizers import rtn_quantize
+
+EXCLUDE_SUBSTRINGS = ("embed", "norm", "scale", "bias", "a_log", "dt_bias",
+                      "conv", "d_skip", "pos")
+
+
+def path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def is_quantizable(path: str, leaf: Any, min_dim: int = 64) -> bool:
+    if not isinstance(leaf, (jax.Array, np.ndarray)):
+        return False
+    if leaf.ndim < 2 or leaf.ndim > 4:
+        return False
+    if leaf.dtype not in (jnp.float32, jnp.bfloat16, jnp.float16):
+        return False
+    low = path.lower()
+    if any(s in low for s in EXCLUDE_SUBSTRINGS):
+        return False
+    if min(leaf.shape[-2:]) < min_dim:
+        return False
+    return True
+
+
+def _batched(fn: Callable, leaf: jax.Array) -> jax.Array:
+    """Apply a 2-D quantizer over leading batch dims (stacked layers, MoE)."""
+    if leaf.ndim == 2:
+        return fn(leaf)
+    flat = leaf.reshape((-1,) + leaf.shape[-2:])
+    out = jnp.stack([fn(flat[i]) for i in range(flat.shape[0])])
+    return out.reshape(leaf.shape)
+
+
+def quantize_model(params, method: str = "qmc",
+                   qmc: QMCConfig = QMCConfig(),
+                   rtn: RTNConfig = RTNConfig(),
+                   mx: MXConfig = MXConfig(),
+                   gptq: GPTQConfig = GPTQConfig(),
+                   awq: AWQConfig = AWQConfig(),
+                   taps: Optional[Dict[str, Any]] = None,
+                   noise_key: Optional[jax.Array] = None,
+                   noise_aware: bool = True,
+                   min_dim: int = 64,
+                   use_int4: bool = True):
+    """Quantize every eligible weight in `params`; returns a new pytree."""
+    if method == "fp16":
+        return params
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    key = noise_key
+    for path, leaf in flat:
+        p = path_str(path)
+        if not is_quantizable(p, leaf, min_dim=min_dim):
+            out.append(leaf)
+            continue
+        if method == "rtn4":
+            q = _batched(lambda w: rtn_quantize(w, rtn.bits), leaf)
+        elif method == "mx4":
+            q = _batched(lambda w: mx_fake_quant(w, mx), leaf)
+        elif method in ("qmc", "qmc_subtile"):
+            cfg = qmc
+            if method == "qmc_subtile" and cfg.granularity != "subtile":
+                import dataclasses
+                cfg = dataclasses.replace(cfg, granularity="subtile")
+            if key is not None:
+                key, sub = jax.random.split(key)
+            else:
+                sub = None
+            q = _batched(
+                lambda w: qmc_fake_quant(w, cfg, noise_key=sub,
+                                         noise_aware=noise_aware), leaf)
+        elif method in ("gptq", "awq"):
+            fn = gptq_quantize if method == "gptq" else awq_quantize
+            fcfg = gptq if method == "gptq" else awq
+            # wk/wv share wq's input; w_gate shares w_up's (same tensor
+            # feeds them), so alias the tap key when needed
+            aliases = {"wk": "wq", "wv": "wq", "w_gate": "w_up"}
+            name = p.split("/")[-1]
+            p_alias = "/".join(p.split("/")[:-1]
+                               + [aliases.get(name, name)])
+            if taps is not None and p_alias in taps:    # unstacked leaf
+                x = taps[p_alias]
+                q = _batched(lambda w: jnp.asarray(fn(w, x, fcfg)), leaf)
+            elif taps is not None and leaf.ndim == 3 \
+                    and p.startswith("blocks/"):
+                # stacked layers: per-group calibration capture under
+                # "blocks/{g}/<rest>" (forward(..., scan_layers=False))
+                rest = p_alias[len("blocks/"):]
+                per_g = []
+                for g in range(leaf.shape[0]):
+                    key_g = f"blocks/{g}/{rest}"
+                    if key_g in taps:
+                        per_g.append(jnp.asarray(
+                            fn(leaf[g], taps[key_g], fcfg)))
+                    else:
+                        per_g.append(rtn_quantize(leaf[g], gptq.bits))
+                q = jnp.stack(per_g)
+            else:
+                # no calibration captured for this leaf -> RTN fallback,
+                # mirroring how GPTQ/AWQ tooling skips unsupported modules.
+                q = _batched(lambda w: rtn_quantize(w, gptq.bits), leaf)
+        elif method == "qtensor":
+            if leaf.ndim == 2 and leaf.shape[0] % qmc.subtile[0] == 0 \
+                    and leaf.shape[1] % qmc.subtile[1] == 0:
+                q = quantize_qtensor(leaf, qmc, use_int4=use_int4)
+            else:
+                out.append(leaf)   # non-tileable leaves stay dense
+                continue
+        else:
+            raise ValueError(f"unknown method {method}")
+        if not isinstance(q, (jax.Array, np.ndarray)) or method == "qtensor":
+            out.append(q)
+        else:
+            out.append(q.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def model_bits_per_weight(params, method: str, qmc: QMCConfig = QMCConfig(),
+                          mx: MXConfig = MXConfig()) -> float:
+    """Average logical bits/weight over quantizable leaves (capacity view)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    n_q = n_total = 0
+    for path, leaf in flat:
+        if not hasattr(leaf, "size"):
+            continue
+        n_total += leaf.size
+        if is_quantizable(path_str(path), leaf):
+            n_q += leaf.size
+    if n_total == 0:
+        return 16.0
+    bits_q = {"fp16": 16.0, "rtn4": 4.0, "gptq": 4.0, "awq": 4.0,
+              "mx4": mx.avg_bits, "qmc": qmc.avg_bits,
+              "qmc_subtile": qmc.avg_bits, "qtensor": qmc.avg_bits}[method]
+    return (n_q * bits_q + (n_total - n_q) * 16.0) / n_total

@@ -1,0 +1,43 @@
+"""AWQ baseline (Lin et al., 2024) — activation-aware weight quantization.
+
+Per-input-channel scales s_c = (mean|X_c|)^alpha (normalized), alpha chosen
+on a grid to minimize the layer output error ||X W - X (Q(sW)/s)||^2.
+Fake-quant equivalence: W_hat = Q(W * s) / s, so no runtime graph rewrite is
+needed for accuracy evaluation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.qconfig import AWQConfig
+from repro.core.quantizers import qrange
+
+
+def _rtn(w, bits):
+    qmin, qmax = qrange(bits)
+    scale = np.maximum(np.abs(w).max(axis=0, keepdims=True), 1e-8) / qmax
+    return np.clip(np.round(w / scale), qmin, qmax) * scale
+
+
+def awq_quantize(w, x, cfg: AWQConfig = AWQConfig()):
+    """Return fake-quantized weights (same shape/dtype as w).
+
+    w: [din, dout]; x: [n_samples, din] captured calibration inputs.
+    """
+    w_np = np.asarray(w, dtype=np.float64)
+    x_np = np.asarray(x, dtype=np.float64).reshape(-1, w_np.shape[0])
+
+    x_mean = np.abs(x_np).mean(axis=0) + 1e-8       # [din]
+    y_ref = x_np @ w_np
+
+    best_err, best_w = np.inf, None
+    for g in range(cfg.n_grid):
+        alpha = g / cfg.n_grid
+        s = np.power(x_mean, alpha)
+        s = s / np.sqrt(s.max() * s.min() + 1e-12)  # normalize dynamic range
+        s = np.maximum(s, 1e-4)
+        w_q = _rtn(w_np * s[:, None], cfg.bits) / s[:, None]
+        err = float(np.mean((y_ref - x_np @ w_q) ** 2))
+        if err < best_err:
+            best_err, best_w = err, w_q
+    return best_w.astype(np.asarray(w).dtype)

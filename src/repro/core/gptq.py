@@ -1,0 +1,64 @@
+"""GPTQ baseline (Frantar et al., 2022) — calibration-based PTQ.
+
+Hessian-guided column-wise rounding with block error propagation, via the
+Cholesky-of-inverse formulation. Runs eagerly in float64 numpy at PTQ time
+(this is an offline procedure; stability > speed here).
+
+Weights use our [din, dout] convention; per-output-channel symmetric scales.
+Calibration inputs X are the captured layer inputs, shape [n_samples, din].
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.qconfig import GPTQConfig
+from repro.core.quantizers import qrange
+
+
+def gptq_quantize(w, x, cfg: GPTQConfig = GPTQConfig()):
+    """Return fake-quantized weights (same shape/dtype as w)."""
+    w_np = np.asarray(w, dtype=np.float64)          # [din, dout]
+    x_np = np.asarray(x, dtype=np.float64).reshape(-1, w_np.shape[0])
+    din, dout = w_np.shape
+    qmin, qmax = qrange(cfg.bits)
+
+    # Hessian of the layerwise objective ||XW - XW_q||^2
+    h = 2.0 * (x_np.T @ x_np)
+    dead = np.diag(h) == 0
+    h[dead, dead] = 1.0
+    w_work = w_np.T.copy()                          # [dout, din] rows=out ch
+    w_work[:, dead] = 0.0
+
+    damp = cfg.percdamp * np.mean(np.diag(h))
+    h[np.arange(din), np.arange(din)] += damp
+
+    # Cholesky of the inverse Hessian (upper-triangular), GPTQ's trick.
+    hinv = np.linalg.inv(h)
+    hinv = np.linalg.cholesky((hinv + hinv.T) / 2.0).T  # upper
+
+    # per-output-channel abs-max scales from the *original* weights
+    scale = np.maximum(np.abs(w_work).max(axis=1, keepdims=True), 1e-8) / qmax
+
+    q_out = np.zeros_like(w_work)
+    bs = cfg.block_size
+    for b0 in range(0, din, bs):
+        b1 = min(b0 + bs, din)
+        w_blk = w_work[:, b0:b1].copy()
+        err_blk = np.zeros_like(w_blk)
+        for j in range(b1 - b0):
+            col = w_blk[:, j]
+            q = np.clip(np.round(col / scale[:, 0]), qmin, qmax)
+            dq = q * scale[:, 0]
+            q_out[:, b0 + j] = dq
+            d = hinv[b0 + j, b0 + j]
+            err = (col - dq) / d
+            # propagate within the block
+            if j + 1 < b1 - b0:
+                w_blk[:, j + 1:] -= np.outer(err,
+                                             hinv[b0 + j, b0 + j + 1:b1])
+            err_blk[:, j] = err
+        # propagate to the remaining columns
+        if b1 < din:
+            w_work[:, b1:] -= err_blk @ hinv[b0:b1, b1:]
+
+    return q_out.T.astype(np.asarray(w).dtype)      # back to [din, dout]

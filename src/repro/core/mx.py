@@ -1,0 +1,41 @@
+"""MXINT4 microscaling baseline (Sharify et al., arXiv:2405.07135).
+
+Blocks of `block` consecutive elements along the input-channel axis share an
+8-bit power-of-two scale (E8M0); elements are signed INT4. This is the
+"hybrid data format" the paper compares against in Table 2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import MXConfig
+from repro.core.quantizers import qrange
+
+
+def mx_fake_quant(w: jax.Array, cfg: MXConfig = MXConfig()) -> jax.Array:
+    orig_dtype = w.dtype
+    w = w.astype(jnp.float32)
+    axis = cfg.block_axis % w.ndim
+    if w.shape[axis] % cfg.block:
+        # pad to a whole number of blocks, quantize, then crop
+        pad = cfg.block - w.shape[axis] % cfg.block
+        padding = [(0, 0)] * w.ndim
+        padding[axis] = (0, pad)
+        wq = mx_fake_quant(jnp.pad(w, padding), cfg)
+        sl = [slice(None)] * w.ndim
+        sl[axis] = slice(0, w.shape[axis])
+        return wq[tuple(sl)].astype(orig_dtype)
+
+    w_moved = jnp.moveaxis(w, axis, 0)
+    lead = w_moved.shape[0]
+    blocked = w_moved.reshape(lead // cfg.block, cfg.block, *w_moved.shape[1:])
+
+    qmin, qmax = qrange(cfg.bits)
+    amax = jnp.max(jnp.abs(blocked), axis=1, keepdims=True)
+    # E8M0 shared exponent: scale is the power of two s.t. amax/scale <= qmax
+    exp = jnp.ceil(jnp.log2(jnp.maximum(amax, 1e-30) / qmax))
+    scale = jnp.exp2(exp)
+    q = jnp.clip(jnp.round(blocked / scale), qmin, qmax)
+    deq = (q * scale).reshape(w_moved.shape)
+    return jnp.moveaxis(deq, 0, axis).astype(orig_dtype)

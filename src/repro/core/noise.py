@@ -1,0 +1,65 @@
+"""MLC ReRAM device-noise simulation (paper §3.4, Fig. 2).
+
+The paper models read errors of multi-level ReRAM cells as discrete
+perturbations on the *stored code*: with probability p_- the read code is one
+step below the written one, with p_+ one step above (adjacent-level
+confusion), otherwise exact. In weight space the error is
+e in {-Delta(s), 0, +Delta(s)}.
+
+We expose:
+  * `perturb_codes`      — sample the flip process on integer codes.
+  * `perturb_weights`    — apply it to fake-quantized weights given a scale.
+  * `confusion_matrix`   — the level-confusion matrix implied by the model
+                           (used by tests and the Fig.2-style benchmark).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qconfig import NoiseModel
+from repro.core.quantizers import qrange
+
+
+def perturb_codes(key: jax.Array, codes: jax.Array, bits: int,
+                  noise: NoiseModel) -> jax.Array:
+    """Flip each code by -1/+1 with (p_minus, p_plus); clip to code range.
+
+    Clipping mirrors the physical device: the lowest/highest conductance
+    states can only be confused inward.
+    """
+    qmin, qmax = qrange(bits)
+    u = jax.random.uniform(key, codes.shape)
+    delta = jnp.where(u < noise.p_minus, -1.0,
+                      jnp.where(u < noise.p_minus + noise.p_plus, 1.0, 0.0))
+    return jnp.clip(codes + delta.astype(codes.dtype), qmin, qmax)
+
+
+def perturb_weights(key: jax.Array, w_deq: jax.Array, scale: jax.Array,
+                    bits: int, noise: NoiseModel) -> jax.Array:
+    """Apply the code-flip model to dequantized weights W = codes * scale."""
+    s = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.round(w_deq / s)
+    noisy = perturb_codes(key, codes, bits, noise)
+    return noisy * jnp.broadcast_to(scale, w_deq.shape).astype(w_deq.dtype)
+
+
+def confusion_matrix(bits: int, noise: NoiseModel) -> jnp.ndarray:
+    """Level confusion matrix P(read=j | written=i) for 2**bits states."""
+    n = 2 ** bits
+    p_m, p_p = noise.p_minus, noise.p_plus
+    m = jnp.zeros((n, n))
+    idx = jnp.arange(n)
+    m = m.at[idx, idx].set(1.0 - p_m - p_p)
+    m = m.at[idx[1:], idx[1:] - 1].add(p_m)
+    m = m.at[idx[:-1], idx[:-1] + 1].add(p_p)
+    # Boundary states fold the outward flip back onto themselves (clipping).
+    m = m.at[0, 0].add(p_m)
+    m = m.at[n - 1, n - 1].add(p_p)
+    return m
+
+
+def ber_from_confusion(bits: int, noise: NoiseModel) -> float:
+    """Aggregate raw bit-error-ish rate: P(read != written), uniform codes."""
+    m = confusion_matrix(bits, noise)
+    return float(1.0 - jnp.mean(jnp.diag(m)))

@@ -1,0 +1,71 @@
+"""Bit-packing of low-bit codes into dense uint8 streams.
+
+This is the capacity-accounting layer: logical 3-bit inliers and 5-bit
+outliers are packed with zero padding waste (8 codes x 3 bits = 3 bytes;
+8 codes x 5 bits = 5 bytes). The same routines model the paper's
+"bit packing/unpacking due to the mismatch between 3-bit weight quantization
+and 2-bit cell storage" overhead when cell_bits=2.
+
+Implemented in jnp so the unpack path can serve as the oracle for the
+Pallas unpack kernel. Codes are signed; they are biased to unsigned before
+packing.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _bias(bits: int) -> int:
+    return 2 ** (bits - 1)
+
+
+def pack_codes(codes, bits: int) -> jnp.ndarray:
+    """Pack signed integer codes (any shape) into a flat uint8 stream.
+
+    Layout: little-endian bit order within the concatenated bitstream,
+    8/gcd groups at a time. Pure-numpy friendly (used offline at PTQ time).
+    """
+    flat = np.asarray(codes).reshape(-1).astype(np.int64) + _bias(bits)
+    assert flat.min() >= 0 and flat.max() < 2 ** bits, "codes out of range"
+    n = flat.size
+    total_bits = n * bits
+    nbytes = (total_bits + 7) // 8
+    # Expand each code into its bits, then pack bits into bytes.
+    bit_idx = np.arange(bits)
+    bits_arr = ((flat[:, None] >> bit_idx[None, :]) & 1).astype(np.uint8)
+    stream = bits_arr.reshape(-1)
+    pad = nbytes * 8 - total_bits
+    if pad:
+        stream = np.concatenate([stream, np.zeros(pad, np.uint8)])
+    byts = stream.reshape(nbytes, 8)
+    packed = (byts << np.arange(8, dtype=np.uint8)[None, :]).sum(
+        axis=1).astype(np.uint8)
+    return jnp.asarray(packed)
+
+
+def unpack_codes(packed, bits: int, n: int, shape: Tuple[int, ...] = None):
+    """Inverse of pack_codes: uint8 stream -> signed codes of length n."""
+    byts = jnp.asarray(packed, dtype=jnp.uint8)
+    bitstream = ((byts[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None, :])
+                 & 1)
+    bitstream = bitstream.reshape(-1)[: n * bits].reshape(n, bits)
+    vals = jnp.sum(bitstream.astype(jnp.int32)
+                   << jnp.arange(bits, dtype=jnp.int32)[None, :], axis=1)
+    vals = vals - _bias(bits)
+    if shape is not None:
+        vals = vals.reshape(shape)
+    return vals
+
+
+def packed_nbytes(n_codes: int, bits: int) -> int:
+    return (n_codes * bits + 7) // 8
+
+
+def cells_per_weight(logical_bits: int, cell_bits: int) -> float:
+    """MLC cells needed to store one logical weight (paper's 2-bit-mode
+
+    packing mismatch: 3-bit weights in 2-bit cells need 1.5 cells/weight)."""
+    return logical_bits / cell_bits

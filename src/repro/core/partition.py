@@ -1,0 +1,93 @@
+"""Outlier/inlier weight partitioning (paper Eq. 1).
+
+Two granularities:
+
+* scalar  — paper-faithful: tau is the (1-rho) quantile of |W| per tensor;
+            W_out = {w : |w| > tau}. Exactly Algorithm 1 Step 1.
+* subtile — TPU-native restructuring (see DESIGN.md §2): the tensor is tiled
+            into (8, 128) VREG granules; the rho fraction of subtiles with the
+            largest max-|w| become the outlier stream. Selection remains
+            magnitude-based and data-free, but streams stay dense and regular
+            so a Pallas kernel can fetch/merge them like the paper's Model
+            Weight Controller merges MRAM and ReRAM streams.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def scalar_outlier_mask(w: jax.Array, rho: float) -> jax.Array:
+    """Boolean mask of the top-rho fraction of |w| (per tensor)."""
+    if rho <= 0.0:
+        return jnp.zeros(w.shape, dtype=bool)
+    if rho >= 1.0:
+        return jnp.ones(w.shape, dtype=bool)
+    tau = jnp.quantile(jnp.abs(w).astype(jnp.float32), 1.0 - rho)
+    return jnp.abs(w) > tau
+
+
+def _subtile_grid(shape: Tuple[int, int], subtile: Tuple[int, int]
+                  ) -> Tuple[int, int]:
+    r, c = subtile
+    if shape[0] % r or shape[1] % c:
+        raise ValueError(f"shape {shape} not divisible by subtile {subtile}")
+    return shape[0] // r, shape[1] // c
+
+
+def subtile_scores(w: jax.Array, subtile: Tuple[int, int] = (8, 128)
+                   ) -> jax.Array:
+    """max |w| per (8,128) subtile -> [gr, gc]."""
+    gr, gc = _subtile_grid(w.shape, subtile)
+    r, c = subtile
+    tiles = w.reshape(gr, r, gc, c)
+    return jnp.max(jnp.abs(tiles), axis=(1, 3))
+
+
+def subtile_outlier_mask(w: jax.Array, rho: float,
+                         subtile: Tuple[int, int] = (8, 128)) -> jax.Array:
+    """[gr, gc] bool mask with exactly round(rho * n_sub) outlier subtiles."""
+    scores = subtile_scores(w, subtile)
+    n_sub = scores.size
+    k = int(round(rho * n_sub))
+    if k <= 0:
+        return jnp.zeros(scores.shape, dtype=bool)
+    if k >= n_sub:
+        return jnp.ones(scores.shape, dtype=bool)
+    flat = scores.reshape(-1)
+    thresh = jnp.sort(flat)[n_sub - k]  # k-th largest
+    mask = flat >= thresh
+    # Tie-break to exactly k: keep the first k True positions.
+    cum = jnp.cumsum(mask.astype(jnp.int32))
+    mask = mask & (cum <= k)
+    return mask.reshape(scores.shape)
+
+
+def expand_subtile_mask(mask: jax.Array, shape: Tuple[int, int],
+                        subtile: Tuple[int, int] = (8, 128)) -> jax.Array:
+    """Broadcast a [gr, gc] subtile mask to elementwise shape."""
+    r, c = subtile
+    gr, gc = mask.shape
+    assert (gr * r, gc * c) == tuple(shape)
+    return jnp.repeat(jnp.repeat(mask, r, axis=0), c, axis=1)
+
+
+def partition(w: jax.Array, rho: float, granularity: str = "scalar",
+              subtile: Tuple[int, int] = (8, 128)
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Return (w_in, w_out) with zeros at the other set's positions.
+
+    The pair satisfies w == w_in + w_out exactly, which is the scatter/merge
+    identity used in Algorithm 1 Step 4.
+    """
+    if granularity == "scalar":
+        m = scalar_outlier_mask(w, rho)
+    elif granularity == "subtile":
+        m = expand_subtile_mask(subtile_outlier_mask(w, rho, subtile),
+                                w.shape, subtile)
+    else:
+        raise ValueError(f"unknown granularity: {granularity}")
+    zero = jnp.zeros_like(w)
+    return jnp.where(m, zero, w), jnp.where(m, w, zero)

@@ -1,0 +1,103 @@
+"""Algorithm 1 — Outlier-Aware Robust Quantization (the paper's core).
+
+`qmc_quantize` is the paper-faithful scalar-granularity routine:
+
+  Step 1  partition W into outliers (top-rho by |w|) and inliers,
+  Step 2  inlier scale via noise-aware search (Eq. 5-7), quantize to 3 bits,
+  Step 3  outlier scale via plain MSE search, quantize to 5 bits,
+  Step 4  scatter/merge: W~ = scatter(W_in*, W_out*).
+
+Returns the fake-quantized tensor (for accuracy evaluation) plus the pieces
+needed by the memory simulator and by noise-injection studies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as part
+from repro.core.noise import perturb_codes
+from repro.core.qconfig import QMCConfig
+from repro.core.quantizers import (dequantize, mse_scale_search,
+                                   noise_aware_scale_search, quantize_codes)
+
+
+@dataclasses.dataclass
+class QMCResult:
+    w_hat: jax.Array          # merged fake-quantized weights (Step 4)
+    outlier_mask: jax.Array   # elementwise bool (True -> MRAM/outlier)
+    scale_in: jax.Array       # per-channel inlier scale
+    scale_out: jax.Array      # per-channel outlier scale
+    codes_in: jax.Array       # inlier codes (zeros at outlier slots)
+    codes_out: jax.Array      # outlier codes (zeros at inlier slots)
+
+
+def _elementwise_mask(w: jax.Array, cfg: QMCConfig) -> jax.Array:
+    if cfg.granularity == "subtile" and w.ndim == 2 \
+            and w.shape[0] % cfg.subtile[0] == 0 \
+            and w.shape[1] % cfg.subtile[1] == 0:
+        sub = part.subtile_outlier_mask(w, cfg.rho, cfg.subtile)
+        return part.expand_subtile_mask(sub, w.shape, cfg.subtile)
+    if cfg.granularity in ("scalar", "subtile"):
+        # subtile granularity degrades to scalar on non-tileable shapes
+        return part.scalar_outlier_mask(w, cfg.rho)
+    raise ValueError(cfg.granularity)
+
+
+def qmc_quantize(w: jax.Array, cfg: QMCConfig,
+                 noise_aware: bool = True) -> QMCResult:
+    """Run Algorithm 1 on one weight tensor. Works on any >=1-D tensor;
+
+    per-channel axis is cfg.channel_axis (last axis by default)."""
+    w = w.astype(jnp.float32)
+    mask = _elementwise_mask(w, cfg)
+
+    noise = cfg.noise if noise_aware else None
+    scale_in = noise_aware_scale_search(
+        w, cfg.bits_in, noise, channel_axis=cfg.channel_axis,
+        grid_lo=cfg.scale_grid_lo, grid_hi=cfg.scale_grid_hi,
+        grid_n=cfg.scale_grid_n, mask=~mask)
+    scale_out = mse_scale_search(
+        w, cfg.bits_out, channel_axis=cfg.channel_axis,
+        grid_lo=cfg.scale_grid_lo, grid_hi=cfg.scale_grid_hi,
+        grid_n=cfg.scale_grid_n, mask=mask)
+
+    codes_in = jnp.where(mask, 0.0, quantize_codes(w, scale_in, cfg.bits_in))
+    codes_out = jnp.where(mask, quantize_codes(w, scale_out, cfg.bits_out),
+                          0.0)
+    w_hat = jnp.where(mask, dequantize(codes_out, scale_out),
+                      dequantize(codes_in, scale_in))
+    return QMCResult(w_hat=w_hat, outlier_mask=mask, scale_in=scale_in,
+                     scale_out=scale_out, codes_in=codes_in,
+                     codes_out=codes_out)
+
+
+def apply_reram_noise(key: jax.Array, res: QMCResult, cfg: QMCConfig
+                      ) -> jax.Array:
+    """Simulate deployment: inlier codes sit in noisy MLC ReRAM; outliers sit
+
+    in (noise-free) MRAM. Returns the noisy merged weights."""
+    noisy_in = perturb_codes(key, res.codes_in, cfg.bits_in, cfg.noise)
+    w_in = dequantize(noisy_in, res.scale_in)
+    w_out = dequantize(res.codes_out, res.scale_out)
+    return jnp.where(res.outlier_mask, w_out, w_in)
+
+
+def qmc_fake_quant(w: jax.Array, cfg: QMCConfig,
+                   noise_key: Optional[jax.Array] = None,
+                   noise_aware: bool = True) -> jax.Array:
+    """One-call fake-quant: Algorithm 1, optionally followed by simulated
+
+    ReRAM read noise (noise_key != None)."""
+    res = qmc_quantize(w, cfg, noise_aware=noise_aware)
+    if noise_key is None:
+        return res.w_hat.astype(w.dtype)
+    return apply_reram_noise(noise_key, res, cfg).astype(w.dtype)
+
+
+def quantization_mse(w: jax.Array, w_hat: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.square(w.astype(jnp.float32)
+                               - w_hat.astype(jnp.float32)))

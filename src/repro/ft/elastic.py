@@ -1,0 +1,55 @@
+"""Elastic mesh selection + checkpoint resharding on restart.
+
+After a node failure the job restarts with whatever device count survives.
+`choose_mesh_shape(n)` picks the largest usable (data, model) grid — model
+parallelism capped so TP stays intra-pod-sized — and checkpoint.restore
+device_puts the (unsharded-on-disk) leaves with the new mesh's shardings.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.launch import mesh as meshlib
+
+PREFERRED_TP = (16, 8, 4, 2, 1)
+
+
+def choose_mesh_shape(n_devices: int, *, want_tp: int = 16,
+                      pods: int = 1) -> Tuple[Tuple[int, ...],
+                                              Tuple[str, ...]]:
+    """Largest (pod, data, model) grid for n_devices (drops stragglers)."""
+    per_pod = n_devices // pods
+    for tp in PREFERRED_TP:
+        if tp > want_tp:
+            continue
+        if per_pod % tp == 0 and per_pod // tp >= 1:
+            dp = per_pod // tp
+            if pods > 1:
+                return (pods, dp, tp), ("pod", "data", "model")
+            return (dp, tp), ("data", "model")
+    return (n_devices,), ("data",)
+
+
+def make_elastic_mesh(*, want_tp: int = 16, pods: int = 1,
+                      devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    shape, axes = choose_mesh_shape(n, want_tp=want_tp, pods=pods)
+    used = 1
+    for s in shape:
+        used *= s
+    return jax.make_mesh(shape, axes, devices=devices[:used])
+
+
+def reshard_restore(tree_like, directory: str, mesh, spec_fn,
+                    step: Optional[int] = None):
+    """Restore a checkpoint written on any mesh onto `mesh`.
+
+    spec_fn(tree_like, mesh) -> matching tree of NamedShardings.
+    """
+    from repro.checkpoint import ckpt
+    shardings = spec_fn(tree_like, mesh)
+    return ckpt.restore(tree_like, directory, step=step,
+                        shardings=shardings)

@@ -1,0 +1,50 @@
+"""Jitted public wrappers around the Pallas kernels, with XLA fallbacks.
+
+`qmm` is the dispatch point used by models.layers.matmul_any: when
+use_pallas is False (CPU dry-run / non-TPU backends) it lowers the pure-jnp
+oracle; when True it calls the Pallas kernel (interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from repro.kernels import ref as kref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def qmm(x: jax.Array, qt: QTensor, use_pallas: bool = False) -> jax.Array:
+    """x [..., K] @ dequant(qt) [K, N] with batch dims preserved."""
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if use_pallas:
+        from repro.kernels.qmm import qmm_pallas
+        m = x2.shape[0]
+        block_m = 128 if m % 128 == 0 else (8 if m % 8 == 0 else None)
+        if block_m is not None and k % 128 == 0 and qt.shape[1] % 128 == 0:
+            y = qmm_pallas(x2, qt, block_m=block_m,
+                           interpret=not _on_tpu())
+            return y.reshape(*lead, qt.shape[1])
+    y = kref.qmm_ref(x2, qt)
+    return y.reshape(*lead, qt.shape[1])
+
+
+def unpack3b(packed: jax.Array, n: int, use_pallas: bool = False
+             ) -> jax.Array:
+    if use_pallas and n % 8 == 0:
+        block = 1024 if n % 1024 == 0 else (8 if n % 8 == 0 else None)
+        if block is not None:
+            from repro.kernels.unpack3b import unpack3b_pallas
+            return unpack3b_pallas(packed, n, block_codes=block,
+                                   interpret=not _on_tpu())
+    return kref.unpack3b_ref(packed, n)

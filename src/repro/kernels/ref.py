@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernel tests assert_allclose against, and the
+fallback compute path on backends without Pallas support (the CPU dry-run
+lowers these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor, dequantize_qtensor
+
+
+def qmm_ref(x: jax.Array, qt: QTensor) -> jax.Array:
+    """Dual-stream quantized matmul oracle: x [M, K] @ dequant(qt) [K, N]."""
+    w = dequantize_qtensor(qt, dtype=jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def unpack3b_ref(packed: jax.Array, n: int) -> jax.Array:
+    """Decode a little-endian 3-bit stream (packed uint8) to int32 codes.
+
+    Mirrors core.packing.unpack_codes for bits=3 (bias 4).
+    """
+    byts = packed.astype(jnp.uint8)
+    bits = ((byts[:, None] >> jnp.arange(8, dtype=jnp.uint8)[None, :]) & 1)
+    bits = bits.reshape(-1)[: n * 3].reshape(n, 3).astype(jnp.int32)
+    vals = bits[:, 0] + (bits[:, 1] << 1) + (bits[:, 2] << 2)
+    return vals - 4
+
+
+def dequant_subtile_ref(qt: QTensor) -> jax.Array:
+    """Dense reconstruction oracle (same as core, re-exported for tests)."""
+    return dequantize_qtensor(qt, dtype=jnp.float32)

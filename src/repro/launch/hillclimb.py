@@ -1,0 +1,114 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("DRYRUN_DEVICES", "512"))
+
+"""Perf hillclimbing harness (§Perf): measure the calibrated roofline terms
+
+of a cell under named optimization variants and log
+hypothesis -> change -> before -> after records to artifacts/hillclimb/.
+
+  python -m repro.launch.hillclimb --cell gemma2_train
+  python -m repro.launch.hillclimb --all
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
+
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.dryrun import calibrated_cost  # noqa: E402
+
+OUT = "artifacts/hillclimb"
+
+# variant -> ModelConfig field overrides (cumulative per cell plan)
+OPTS = {
+    "baseline": {},
+    "chunked_ce": {"chunked_ce": True},
+    "chunked_attn": {"chunked_attn": True},
+    "both": {"chunked_ce": True, "chunked_attn": True},
+    "both_dots": {"chunked_ce": True, "chunked_attn": True,
+                  "remat_policy": "dots"},
+    "kv8": {"kv_cache_quant": True},
+    "both_kv8": {"chunked_ce": True, "chunked_attn": True,
+                 "kv_cache_quant": True},
+}
+
+# The three hillclimb cells (chosen per EXPERIMENTS.md §Perf):
+#   gemma2_train  — worst train roofline fraction (256k-vocab CE dominates)
+#   dbrx_decode   — most collective-bound decode (MoE + QMC serving)
+#   stablelm_dec  — paper-representative SLM edge decode (memory-bound);
+#                   also measures FP16-weights vs QMC-weights serving.
+CELLS = {
+    "gemma2_train": dict(arch="gemma2-2b", shape="train_4k",
+                         serve_weights="fp16",
+                         variants=["baseline", "chunked_ce",
+                                   "chunked_attn", "both", "both_dots"]),
+    "dbrx_decode": dict(arch="dbrx-132b", shape="decode_32k",
+                        serve_weights="qtensor",
+                        variants=["baseline", "kv8"]),
+    "stablelm_decode": dict(arch="stablelm-1.6b", shape="decode_32k",
+                            serve_weights="qtensor",
+                            variants=["baseline", "kv8"]),
+    "stablelm_decode_fp16": dict(arch="stablelm-1.6b", shape="decode_32k",
+                                 serve_weights="fp16",
+                                 variants=["baseline", "kv8"]),
+}
+
+
+def measure(arch: str, shape: str, serve_weights: str,
+            overrides: Dict) -> Dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    suite = get_shape(shape)
+    t0 = time.monotonic()
+    cal = calibrated_cost(arch, shape, multi_pod=False,
+                          serve_weights=serve_weights, cfg=cfg)
+    roof = rl.from_artifacts(
+        arch, shape, "pod16x16", 256, cal["cost"], cal["collectives"],
+        rl.model_flops_for(cfg, suite),
+        rl.useful_bytes_for(cfg, suite, serve_weights))
+    return {"roofline": roof.to_dict(),
+            "collectives": cal["collectives"],
+            "wall_s": time.monotonic() - t0}
+
+
+def run_cell(name: str) -> Dict:
+    plan = CELLS[name]
+    results = {}
+    for variant in plan["variants"]:
+        try:
+            r = measure(plan["arch"], plan["shape"], plan["serve_weights"],
+                        OPTS[variant])
+        except Exception as e:  # noqa: BLE001
+            r = {"error": f"{type(e).__name__}: {e}"}
+        results[variant] = r
+        roof = r.get("roofline", {})
+        print(f"[{name}/{variant}] "
+              f"t_comp={roof.get('t_compute', 0):.3e} "
+              f"t_mem={roof.get('t_memory', 0):.3e} "
+              f"t_coll={roof.get('t_collective', 0):.3e} "
+              f"frac={roof.get('roofline_fraction', 0):.4f} "
+              f"{r.get('error', '')}", flush=True)
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, f"{name}.json"), "w") as f:
+        json.dump({"cell": name, "plan": {k: v for k, v in plan.items()},
+                   "results": results}, f, indent=1, default=str)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, choices=list(CELLS))
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    names = list(CELLS) if args.all or not args.cell else [args.cell]
+    for n in names:
+        run_cell(n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Logical sharding rules: parameter/activation/cache PartitionSpecs.
+
+Scheme (GSPMD; MaxText-style):
+  * TP ("model" axis): attention heads / FFN hidden / vocab.
+  * FSDP/ZeRO-3 ("data" axis): the non-TP dim of every large parameter is
+    additionally sharded over data; GSPMD all-gathers per layer on use and
+    reduce-scatters gradients. Optimizer state inherits the param spec, so
+    Adam moments are fully sharded.
+  * "pod" axis: pure data parallelism (batch), gradients all-reduce across
+    pods once per step.
+
+Rules are name-based over the flattened param path; stacked leaves
+(blocks/encoder/xattn pytrees carry a leading n_groups dim) get a leading
+None.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.qtensor import QTensor
+from repro.launch import mesh as meshlib
+
+_STACKED_PREFIXES = ("blocks/", "encoder/blocks/", "xattn/")
+
+# (regex on path, spec for the trailing (non-stacked) dims)
+_RULES = [
+    (r"embed/tok$",            ("model", "data")),
+    (r"lm_head$",              ("data", "model")),
+    (r"pos_emb$",              (None, None)),
+    # attention
+    (r"attn/w[qkv]$",          ("data", "model")),
+    (r"attn/wo$",              ("model", "data")),
+    (r"attn/b[qkvo]$",         (None,)),
+    # dense FFN
+    (r"ffn/w_(gate|up)$",      ("data", "model")),
+    (r"ffn/w_down$",           ("model", "data")),
+    # MoE FFN (leaf ndim 3 without stacking: [E, d, ff])
+    (r"ffn/router$",           ("data", None)),
+    # mamba
+    (r"mamba/in_proj$",        ("data", "model")),
+    (r"mamba/out_proj$",       ("model", "data")),
+    (r"mamba/conv_w$",         ("model", None)),
+    (r"mamba/(a_log|dt_bias|d_skip)$", (None,)),
+    (r"mamba/norm_scale$",     (None,)),
+    (r"norm",                  (None,)),
+]
+_MOE_EXPERT_RULES = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+def _strip_axes(spec: Tuple, mesh) -> Tuple:
+    """Drop axes the mesh doesn't have (e.g. no fsdp on a 1-D mesh)."""
+    names = mesh.axis_names
+    return tuple((a if (a in names) else None) for a in spec)
+
+
+def param_spec(path: str, leaf, mesh) -> P:
+    """PartitionSpec for one parameter leaf."""
+    stacked = any(path.startswith(p) or ("/" + p) in path
+                  for p in _STACKED_PREFIXES)
+    ndim = getattr(leaf, "ndim", 0)
+    shape = tuple(getattr(leaf, "shape", ()))
+    base_ndim = ndim - (1 if stacked else 0)
+
+    # MoE expert tensors: [.., E, d, ff]
+    m = re.search(r"ffn/(w_gate|w_up|w_down)$", path)
+    if m is not None and base_ndim == 3:
+        e = shape[1] if stacked else shape[0]
+        if e % meshlib.axis_size(mesh, "model") == 0:
+            spec = _MOE_EXPERT_RULES[m.group(1)]
+        else:
+            # too few experts for EP: megatron-shard the FFN dims instead
+            spec = {"w_gate": (None, "data", "model"),
+                    "w_up": (None, "data", "model"),
+                    "w_down": (None, "model", "data")}[m.group(1)]
+        return _finalize(spec, stacked, ndim, shape, mesh)
+
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            if len(spec) != base_ndim:
+                spec = tuple(spec[:base_ndim]) + (None,) * max(
+                    0, base_ndim - len(spec))
+            return _finalize(spec, stacked, ndim, shape, mesh)
+    return _finalize((None,) * base_ndim, stacked, ndim, shape, mesh)
+
+
+def _finalize(spec, stacked, ndim, shape, mesh) -> P:
+    spec = tuple(spec)
+    if stacked:
+        spec = (None,) + spec
+    spec = spec + (None,) * (ndim - len(spec))
+    spec = _strip_axes(spec, mesh)
+    # drop shardings that don't divide the dim (pjit in_shardings reject
+    # padding; odd dims — 92553 vocab, 25 heads — replicate instead)
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            out.append(None)
+            continue
+        n = meshlib.axis_size(mesh, ax) if isinstance(ax, str) else \
+            int(np.prod([meshlib.axis_size(mesh, a) for a in ax]))
+        out.append(ax if dim % n == 0 else None)
+    return P(*out)
+
+
+def shard_params_tree(params, mesh):
+    """Tree of NamedShardings matching `params` (QTensor-aware)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        p = _path_str(path)
+        out.append(NamedSharding(mesh, _qtensor_field_spec(p, leaf, mesh))
+                   if _in_qtensor(p) else
+                   NamedSharding(mesh, param_spec(p, leaf, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+_QT_FIELDS = ("in_codes", "out_codes", "stream_pos", "is_out", "scale_in",
+              "scale_out")
+
+
+def _in_qtensor(path: str) -> bool:
+    return path.split("/")[-1] in _QT_FIELDS
+
+
+def _qtensor_field_spec(path: str, leaf, mesh) -> P:
+    """QTensor stream fields.
+
+    Layouts: base fields (in/out codes [n,8,128]; pos/tags/scales 2-D) may
+    carry lead dims — (G,) layer stack, (S,) TP shards, (G,S) or (G,E).
+    The innermost lead dim is the distribution dim (TP shard or expert):
+    shard it on `model` when divisible; everything else replicated.
+    """
+    field = path.split("/")[-1]
+    base = {"in_codes": 3, "out_codes": 3, "stream_pos": 2, "is_out": 2,
+            "scale_in": 2, "scale_out": 2}[field]
+    lead = leaf.ndim - base
+    if lead <= 0:
+        return P()
+    tp_n = meshlib.axis_size(mesh, "model")
+    shard_dim = lead - 1
+    ax = "model" if ("model" in mesh.axis_names
+                     and leaf.shape[shard_dim] % tp_n == 0) else None
+    spec = [None] * leaf.ndim
+    spec[shard_dim] = ax
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_spec(mesh, global_batch: int) -> P:
+    dp = meshlib.dp_axes(mesh)
+    if global_batch % meshlib.dp_size(mesh) == 0 and dp:
+        return P(dp)
+    return P()
+
+
+def batch_sharding(mesh, global_batch: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(mesh, global_batch))
+
+
+def cache_spec(path: str, leaf, mesh, global_batch: int) -> P:
+    """KV/SSM cache specs. Leaves are stacked: leading n_groups dim.
+
+    attn k/v [G,B,T,KV,hd]: batch on dp when divisible, else sequence on
+    data (sequence-parallel cache for long-context batch=1); kv heads on
+    model when divisible.
+    """
+    dp = meshlib.dp_axes(mesh)
+    dp_n = meshlib.dp_size(mesh)
+    tp_n = meshlib.axis_size(mesh, "model")
+    batch_ok = dp and global_batch % dp_n == 0
+
+    if path.endswith("/k") or path.endswith("/v"):
+        # flat cache layout [G, B, T, KV*hd]: the fused dim shards 16-way
+        # even when n_kv_heads < TP (GSPMD reshapes it to the nested
+        # (KV x hd) sharding the attention einsums want — §Perf cell B)
+        g, b, t, kvd = leaf.shape
+        kv_ax = "model" if kvd % tp_n == 0 else None
+        if batch_ok:
+            return P(None, dp, None, kv_ax)
+        data_n = meshlib.axis_size(mesh, "data")
+        seq_ax = "data" if t % data_n == 0 else None
+        return P(None, None, seq_ax, kv_ax)
+    if path.endswith("k_scale") or path.endswith("v_scale"):
+        g, b, t, kv = leaf.shape
+        kv_ax = "model" if kv % tp_n == 0 else None
+        if batch_ok:
+            return P(None, dp, None, kv_ax)
+        data_n = meshlib.axis_size(mesh, "data")
+        seq_ax = "data" if t % data_n == 0 else None
+        return P(None, None, seq_ax, kv_ax)
+    if path.endswith("xk") or path.endswith("xv"):
+        return P(None, dp if batch_ok else None, None, None, None)
+    if path.endswith("/ssm"):
+        g, b, h, p_, n = leaf.shape
+        h_ax = "model" if h % tp_n == 0 else None
+        return P(None, dp if batch_ok else None, h_ax, None, None)
+    if path.endswith("/conv"):
+        g, b, k, c = leaf.shape
+        c_ax = "model" if c % tp_n == 0 else None
+        return P(None, dp if batch_ok else None, None, c_ax)
+    return P()
+
+
+def shard_cache_tree(cache, mesh, global_batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    out = [NamedSharding(mesh, cache_spec(_path_str(p), l, mesh,
+                                          global_batch))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def logits_spec(mesh, global_batch: int) -> P:
+    dp = meshlib.dp_axes(mesh)
+    if dp and global_batch % meshlib.dp_size(mesh) == 0:
+        return P(dp, None, "model" if "model" in mesh.axis_names else None)
+    return P(None, None, "model" if "model" in mesh.axis_names else None)

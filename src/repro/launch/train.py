@@ -1,0 +1,74 @@
+"""Training driver CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
+      --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --resume
+
+Uses the real distributed step builder when a mesh is requested (--dp/--tp)
+and the single-device fallback otherwise. On restart after a crash/kill it
+resumes from the newest checkpoint (fault-tolerance path).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced_config
+from repro.launch import mesh as meshlib
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--dp", type=int, default=0)
+    ap.add_argument("--tp", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--deadline", type=float, default=600.0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(
+        args.arch)
+    mesh = None
+    if args.dp or args.tp:
+        dp = args.dp or 1
+        tp = args.tp or 1
+        mesh = meshlib.make_mesh((dp, tp), ("data", "model"))
+
+    tc = TrainConfig(steps=args.steps, global_batch=args.batch,
+                     seq_len=args.seq, microbatches=args.microbatches,
+                     ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                     resume=args.resume, seed=args.seed,
+                     step_deadline_s=args.deadline)
+    oc = AdamWConfig(lr=args.lr)
+
+    def extra(batch, seq, c):
+        out = {}
+        if c.n_vis_tokens:
+            out["vis_embeds"] = jax.numpy.zeros(
+                (batch, c.n_vis_tokens, c.d_model), jax.numpy.float32)
+        if c.is_encdec:
+            out["frames"] = jax.numpy.zeros(
+                (batch, c.enc_seq, c.d_model), jax.numpy.float32)
+        return out
+
+    result = train(cfg, tc, oc, mesh=mesh,
+                   extra_batch_fn=extra if (cfg.n_vis_tokens
+                                            or cfg.is_encdec) else None)
+    final = result["history"][-1]["loss"] if result["history"] else None
+    print(f"[train] done. final loss={final}")
+
+
+if __name__ == "__main__":
+    main()

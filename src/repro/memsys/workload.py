@@ -1,0 +1,114 @@
+"""Decode-step traffic model for a model config + quantization scheme.
+
+LLM decode is read-dominated: every generated token streams all active
+weights once, plus the KV cache / SSM state, plus (small) activations.
+This module turns a ModelConfig + quant method into a byte/bit traffic
+breakdown that the memory-system simulator consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.qconfig import MXConfig, QMCConfig
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Traffic:
+    """Per-decode-step traffic (bits) and residency (bits / cells)."""
+    name: str
+    # streamed per token
+    weight_bits_outlier: float       # -> MRAM in QMC
+    weight_bits_inlier: float        # -> ReRAM in QMC (or DRAM for baselines)
+    kv_bits: float                   # -> LPDDR5 always
+    act_bits: float                  # -> LPDDR5 always
+    # storage
+    weight_cells_inlier: float       # MLC cells (capacity accounting)
+    weight_cells_outlier: float
+    dram_resident_bits: float        # weights resident in DRAM (baselines)
+    flash_resident_bits: float       # legacy hierarchy keeps a Flash copy
+
+    @property
+    def weight_bits(self) -> float:
+        return self.weight_bits_outlier + self.weight_bits_inlier
+
+    @property
+    def total_cells(self) -> float:
+        return self.weight_cells_inlier + self.weight_cells_outlier
+
+
+def kv_bits_per_step(cfg: ModelConfig, seq_len: int, kv_dtype_bits: int = 16
+                     ) -> float:
+    """KV cache + SSM state bits read per decode step (batch=1)."""
+    n_attn = sum(1 for k in cfg.pattern
+                 if k.startswith(("attn", "hybrid"))) * cfg.n_groups
+    kv = 2.0 * n_attn * cfg.kv_dim * seq_len * kv_dtype_bits
+    n_ssm = sum(1 for k in cfg.pattern
+                if k == "mamba" or k.startswith("hybrid")) * cfg.n_groups
+    ssm = n_ssm * (cfg.ssm_nheads * cfg.ssm_headdim * cfg.d_state * 32
+                   + (cfg.d_conv - 1) * cfg.conv_dim * kv_dtype_bits)
+    if cfg.is_encdec:
+        kv += 2.0 * cfg.n_layers * cfg.kv_dim * cfg.enc_seq * kv_dtype_bits
+    return kv + ssm
+
+
+def act_bits_per_step(cfg: ModelConfig, act_dtype_bits: int = 16) -> float:
+    return 4.0 * cfg.n_layers * cfg.d_model * act_dtype_bits
+
+
+def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,
+                 qmc: QMCConfig = QMCConfig(), mx: MXConfig = MXConfig(),
+                 legacy_flash: bool = False) -> Traffic:
+    """Traffic for one decode step under a quantization scheme.
+
+    Methods: fp16 | rtn4 | awq | gptq | mx4 -> homogeneous weights in DRAM.
+             qmc -> dual-precision split across MRAM/ReRAM.
+             emems_mram / emems_reram -> homogeneous INT4 in a single NVM.
+    """
+    n_active = cfg.active_param_count()
+    kv = kv_bits_per_step(cfg, seq_len)
+    act = act_bits_per_step(cfg)
+
+    if method in ("fp16", "rtn4", "awq", "gptq", "mx4"):
+        bits = {"fp16": 16.0, "rtn4": 4.0, "awq": 4.0, "gptq": 4.0,
+                "mx4": mx.avg_bits}[method]
+        wbits = n_active * bits
+        return Traffic(name=method, weight_bits_outlier=0.0,
+                       weight_bits_inlier=wbits, kv_bits=kv, act_bits=act,
+                       weight_cells_inlier=cfg.param_count() * bits,
+                       weight_cells_outlier=0.0,
+                       dram_resident_bits=cfg.param_count() * bits,
+                       flash_resident_bits=(cfg.param_count() * bits
+                                            if legacy_flash else 0.0))
+
+    if method == "qmc":
+        rho = qmc.rho
+        out_bits = n_active * rho * qmc.bits_out
+        in_bits = n_active * (1 - rho) * qmc.bits_in
+        # capacity: inliers live in MLC cells (bits_in / cell_bits cells per
+        # weight), outliers in (1-bit) MRAM cells
+        in_cells = cfg.param_count() * (1 - rho) * qmc.bits_in \
+            / qmc.cell_bits
+        out_cells = cfg.param_count() * rho * qmc.bits_out
+        return Traffic(name=f"qmc{qmc.cell_bits}b",
+                       weight_bits_outlier=out_bits,
+                       weight_bits_inlier=in_bits, kv_bits=kv, act_bits=act,
+                       weight_cells_inlier=in_cells,
+                       weight_cells_outlier=out_cells,
+                       dram_resident_bits=0.0, flash_resident_bits=0.0)
+
+    if method in ("emems_mram", "emems_reram"):
+        wbits = n_active * 4.0
+        if method == "emems_mram":
+            return Traffic(name=method, weight_bits_outlier=wbits,
+                           weight_bits_inlier=0.0, kv_bits=kv, act_bits=act,
+                           weight_cells_inlier=0.0,
+                           weight_cells_outlier=cfg.param_count() * 4.0,
+                           dram_resident_bits=0.0, flash_resident_bits=0.0)
+        return Traffic(name=method, weight_bits_outlier=0.0,
+                       weight_bits_inlier=wbits, kv_bits=kv, act_bits=act,
+                       weight_cells_inlier=cfg.param_count() * 4.0 / 3.0,
+                       weight_cells_outlier=0.0,
+                       dram_resident_bits=0.0, flash_resident_bits=0.0)
+    raise ValueError(method)

@@ -1,0 +1,8 @@
+"""Model zoo: one configurable stack covering all assigned architectures."""
+from repro.models.config import ModelConfig
+from repro.models.model import (decode_step, forward, init_params, prefill,
+                                train_loss)
+from repro.models.kvcache import cache_bytes, init_cache, init_encdec_cache
+
+__all__ = ["ModelConfig", "decode_step", "forward", "init_params", "prefill",
+           "train_loss", "cache_bytes", "init_cache", "init_encdec_cache"]

@@ -1,0 +1,254 @@
+"""Grouped-query attention with sliding-window, softcap, cache and cross-attn.
+
+One implementation serves training (full causal), prefill (same, but also
+returns the KV cache) and decode (single query over a fixed-size cache with
+a validity length mask). Everything is einsum-based so GSPMD can shard heads
+on the `model` mesh axis and batch on `data`.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rotary, linear, rotary_cos_sin, softcap
+
+
+def _expand_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    """q [B,S,H,D] -> [B,S,KV,G,D] with H = KV*G."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           q_positions: jax.Array, kv_positions: jax.Array,
+           kv_valid_len: Optional[jax.Array] = None,
+           causal: bool = True, window: Optional[int] = None,
+           attn_softcap: Optional[float] = None) -> jax.Array:
+    """q [B,S,H,D]; k,v [B,T,KV,D]; positions are absolute token indices.
+
+    Returns [B,S,H,D]. The mask combines causality, optional sliding window
+    and cache validity (for decode where T is the max cache size).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    n_kv = k.shape[2]
+    qg = _expand_gqa(q, n_kv)                              # [B,S,KV,G,D]
+    scale = jnp.asarray(d ** -0.5, q.dtype)
+
+    # f32 accumulation WITHOUT materializing f32 copies of K (the K cache
+    # is the dominant byte stream at decode time — §Perf iteration 1)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg * scale, k,
+                        preferred_element_type=jnp.float32)
+    scores = softcap(scores, attn_softcap)
+
+    pq = q_positions[:, None, None, :, None]               # [B,1,1,S,1]
+    pk = kv_positions[:, None, None, None, :]              # [B,1,1,1,T]
+    mask = jnp.ones((b, 1, 1, s, t), dtype=bool)
+    if causal:
+        mask &= pk <= pq
+    if window is not None:
+        mask &= pq - pk < window
+    if kv_valid_len is not None:
+        valid = kv_positions < kv_valid_len[:, None]
+        mask &= valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   q_positions: jax.Array, kv_positions: jax.Array,
+                   causal: bool = True, window: Optional[int] = None,
+                   attn_softcap: Optional[float] = None,
+                   chunk: int = 1024) -> jax.Array:
+    """Flash-style online-softmax attention: lax.scan over KV chunks.
+
+    Beyond-paper optimization for the train/prefill memory roofline term:
+    scores are never materialized at [S, T], only [S, chunk] per step, and
+    the scan body is rematerialized in the backward pass (jax.checkpoint)
+    so residuals stay O(S * D) instead of O(S * T).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    n_kv = k.shape[2]
+    if t % chunk:
+        pad = chunk - t % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=2 ** 30)
+        t += pad
+    n_chunks = t // chunk
+    qg = _expand_gqa(q, n_kv) * jnp.asarray(d ** -0.5, q.dtype)
+    ks = (k.reshape(b, n_chunks, chunk, n_kv, d).swapaxes(0, 1))
+    vs = (v.reshape(b, n_chunks, chunk, n_kv, d).swapaxes(0, 1))
+    ps = (kv_positions.reshape(b, n_chunks, chunk).swapaxes(0, 1))
+    pq = q_positions[:, None, None, :, None]            # [B,1,1,S,1]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        k_c, v_c, p_c = inp
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, k_c,
+                            preferred_element_type=jnp.float32)
+        scores = softcap(scores, attn_softcap)
+        pk = p_c[:, None, None, None, :]
+        mask = jnp.ones_like(scores, dtype=bool)
+        if causal:
+            mask &= pk <= pq
+        if window is not None:
+            mask &= pq - pk < window
+        mask &= pk < 2 ** 30
+        scores = jnp.where(mask, scores, -1e30)
+        cm = jnp.max(scores, axis=-1)                    # [B,KV,G,S]
+        m_new = jnp.maximum(m, cm)
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(v_c.dtype), v_c,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((b, n_kv, h // n_kv, s), -1e30),
+            jnp.zeros((b, n_kv, h // n_kv, s)),
+            jnp.zeros((b, n_kv, h // n_kv, s, d)))
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (ks, vs, ps))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]         # [B,KV,G,S,D]
+    return (out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+            .astype(q.dtype))
+
+
+def attn_block(p: dict, x: jax.Array, cfg, *,
+               positions: jax.Array,
+               window: Optional[int],
+               cache: Optional[dict] = None,
+               pos: Optional[jax.Array] = None,
+               tap=None, use_pallas: bool = False
+               ) -> Tuple[jax.Array, Optional[dict]]:
+    """Self-attention mixer. cache={'k','v'} [B,T,KV,D] (decode/prefill)."""
+    b, s, d_model = x.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    if tap:
+        tap("wq", x)
+    q = linear(x, p["wq"], p.get("bq"), use_pallas).reshape(b, s, nh, hd)
+    k = linear(x, p["wk"], p.get("bk"), use_pallas).reshape(b, s, nkv, hd)
+    v = linear(x, p["wv"], p.get("bv"), use_pallas).reshape(b, s, nkv, hd)
+
+    cos, sin = rotary_cos_sin(positions, int(hd * cfg.rotary_pct) // 2 * 2,
+                              cfg.rope_theta, dtype=jnp.float32)
+    q = apply_rotary(q, cos, sin, cfg.rotary_pct)
+    k = apply_rotary(k, cos, sin, cfg.rotary_pct)
+
+    new_cache = None
+    if cache is None:                                      # training
+        kv_pos = positions
+        k_all, v_all, valid = k, v, None
+        if cfg.chunked_attn and s > cfg.attn_chunk:
+            out = attend_chunked(q, k, v, q_positions=positions,
+                                 kv_positions=kv_pos, causal=True,
+                                 window=window,
+                                 attn_softcap=cfg.attn_softcap,
+                                 chunk=cfg.attn_chunk)
+            if tap:
+                tap("wo", out.reshape(b, s, nh * hd))
+            return linear(out.reshape(b, s, nh * hd), p["wo"],
+                          p.get("bo"), use_pallas, tp_dim=0), None
+    else:
+        t_max = cache["k"].shape[1]
+        pos0 = 0 if s > 1 else (pos if pos is not None
+                                else positions[0, 0])
+        new_cache = _cache_write(cache, k, v, pos0)
+        k_all, v_all = _cache_read(new_cache, x.dtype, nkv, hd)
+        kv_pos = jnp.broadcast_to(jnp.arange(t_max)[None, :], (b, t_max))
+        valid = (positions[:, -1] + 1)
+
+    out = attend(q, k_all if cache is not None else k,
+                 v_all if cache is not None else v,
+                 q_positions=positions, kv_positions=kv_pos,
+                 kv_valid_len=valid, causal=True, window=window,
+                 attn_softcap=cfg.attn_softcap)
+    if tap:
+        tap("wo", out.reshape(b, s, nh * hd))
+    y = linear(out.reshape(b, s, nh * hd), p["wo"], p.get("bo"),
+               use_pallas, tp_dim=0)
+    return y, new_cache
+
+
+def _cache_write(cache: dict, k: jax.Array, v: jax.Array, pos0) -> dict:
+    """Insert new K/V at pos0 (cache layout is flat [B, T, KV*hd]);
+
+    quantizes to int8 when the cache is int8."""
+    b, s, n_kv, hd = k.shape
+    if "k_scale" in cache:
+        def q8(x):
+            scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) \
+                / 127.0 + 1e-8
+            codes = jnp.clip(jnp.round(x.astype(jnp.float32)
+                                       / scale[..., None]), -127, 127)
+            return (codes.astype(jnp.int8).reshape(b, s, n_kv * hd),
+                    scale.astype(jnp.bfloat16))
+        kq, ks = q8(k)
+        vq, vs = q8(v)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                              (0, pos0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                              (0, pos0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks,
+                                                    (0, pos0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs,
+                                                    (0, pos0, 0)),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype).reshape(b, s, n_kv * hd),
+            (0, pos0, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype).reshape(b, s, n_kv * hd),
+            (0, pos0, 0)),
+    }
+
+
+def _cache_read(cache: dict, dtype, n_kv: int, hd: int):
+    b, t, _ = cache["k"].shape
+    k = cache["k"].reshape(b, t, n_kv, hd)
+    v = cache["v"].reshape(b, t, n_kv, hd)
+    if "k_scale" in cache:
+        k = k.astype(dtype) * cache["k_scale"][..., None].astype(dtype)
+        v = v.astype(dtype) * cache["v_scale"][..., None].astype(dtype)
+    return k, v
+
+
+def cross_attn_block(p: dict, x: jax.Array, enc_kv: dict, cfg, *,
+                     tap=None, use_pallas: bool = False) -> jax.Array:
+    """Cross-attention (whisper decoder): K/V precomputed from the encoder."""
+    b, s, _ = x.shape
+    hd, nh = cfg.head_dim, cfg.n_heads
+    if tap:
+        tap("wq", x)
+    q = linear(x, p["wq"], p.get("bq"), use_pallas).reshape(b, s, nh, hd)
+    k, v = enc_kv["xk"], enc_kv["xv"]                      # [B,T,KV,D]
+    t = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos_k = jnp.broadcast_to(jnp.arange(t)[None], (b, t))
+    out = attend(q, k, v, q_positions=pos_q, kv_positions=pos_k,
+                 causal=False, window=None,
+                 attn_softcap=cfg.attn_softcap)
+    if tap:
+        tap("wo", out.reshape(b, s, nh * hd))
+    return linear(out.reshape(b, s, nh * hd), p["wo"], p.get("bo"),
+                  use_pallas, tp_dim=0)
+
+
+def precompute_cross_kv(p: dict, enc_out: jax.Array, cfg,
+                        use_pallas: bool = False) -> dict:
+    b, t, _ = enc_out.shape
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    k = linear(enc_out, p["wk"], p.get("bk"), use_pallas
+               ).reshape(b, t, nkv, hd)
+    v = linear(enc_out, p["wv"], p.get("bv"), use_pallas
+               ).reshape(b, t, nkv, hd)
+    return {"xk": k, "xv": v}

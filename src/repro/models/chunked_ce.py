@@ -1,0 +1,186 @@
+"""Vocab-chunked fused lm_head + cross-entropy (beyond-paper optimization).
+
+The naive path materializes logits [T, V] in f32 twice (forward + dlogits in
+backward) and — with a vocab-sharded lm_head — forces an all-gather of the
+full logits for the label gather. For gemma2's 256k vocab at 1M tokens
+that's the dominant memory AND collective term of the train step.
+
+This implementation scans over vocab chunks with an online logsumexp and a
+custom VJP that regenerates each chunk's logits in the backward pass, so
+peak residency is O(T * chunk) and the label "gather" is an arithmetic mask
+(no cross-shard gather). The gold logit is accumulated with masks, keeping
+every chunk's compute local to its vocab shard under GSPMD.
+
+loss = mean_mask( logsumexp(logits) - logits[label] ),
+logits = softcap(x @ w) with the model's optional logit softcap.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _pad_w(w: jax.Array, chunk: int):
+    d, v = w.shape
+    n_chunks = -(-v // chunk)
+    pad = n_chunks * chunk - v
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    # [n_chunks, d, chunk]
+    return w.reshape(d, n_chunks, chunk).swapaxes(0, 1), n_chunks, v
+
+
+def _chunk_logits(x2, w_c, c0, chunk, v, softcap):
+    """x2 [T, d] f32-accum matmul -> softcapped f32 logits + valid mask."""
+    logits = jnp.matmul(x2, w_c.astype(x2.dtype),
+                        preferred_element_type=jnp.float32)
+    logits = logits.astype(jnp.float32)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    col = c0 + jnp.arange(chunk)
+    valid = col < v
+    logits = jnp.where(valid[None, :], logits, -jnp.inf)
+    return logits, col, valid
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def chunked_ce(x2: jax.Array, w: jax.Array, labels1: jax.Array,
+               chunk: int, softcap: Optional[float],
+               mask_info: tuple) -> jax.Array:
+    loss, _ = _fwd(x2, w, labels1, chunk, softcap, mask_info)
+    return loss
+
+
+def _fwd(x2, w, labels1, chunk, softcap, mask_info):
+    t, d = x2.shape
+    w_stack, n_chunks, v = _pad_w(w, chunk)
+    neg = jnp.float32(-1e30)
+
+    def body(carry, inp):
+        m, s, gold = carry
+        c_idx, w_c = inp
+        logits, col, _ = _chunk_logits(x2, w_c, c_idx * chunk, chunk, v,
+                                       softcap)
+        cm = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m, cm)
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=1)
+        hit = (labels1[:, None] == col[None, :])
+        gold = gold + jnp.sum(jnp.where(hit, logits, 0.0), axis=1)
+        return (m_new, s, gold), None
+
+    init = (jnp.full((t,), neg), jnp.zeros((t,)), jnp.zeros((t,)))
+    (m, s, gold), _ = jax.lax.scan(
+        body, init, (jnp.arange(n_chunks), w_stack))
+    lse = m + jnp.log(s)
+    nll = lse - gold
+    tok_mask, denom = mask_info_arrays(mask_info, t)
+    loss = jnp.sum(nll * tok_mask) / denom
+    return loss, (x2, w, labels1, lse, tok_mask, denom)
+
+
+def mask_info_arrays(mask_info, t):
+    kind, payload = mask_info
+    if kind == "none":
+        return jnp.ones((t,), jnp.float32), jnp.float32(t)
+    raise ValueError(kind)
+
+
+def _bwd(chunk, softcap, mask_info, res, g):
+    x2, w, labels1, lse, tok_mask, denom = res
+    t, d = x2.shape
+    w_stack, n_chunks, v = _pad_w(w, chunk)
+    coef = (g * tok_mask / denom).astype(jnp.float32)   # [T]
+
+    def body(dx, inp):
+        c_idx, w_c = inp
+        logits, col, valid = _chunk_logits(x2, w_c, c_idx * chunk, chunk,
+                                           v, softcap)
+        p = jnp.exp(logits - lse[:, None])              # softmax chunk
+        hit = (labels1[:, None] == col[None, :]).astype(jnp.float32)
+        dlog = (p - hit) * coef[:, None]                # [T, chunk]
+        if softcap is not None:
+            th = logits / softcap                       # tanh(z/cap)
+            dlog = dlog * (1.0 - jnp.square(th))
+        dlog = jnp.where(valid[None, :], dlog, 0.0)
+        dw_c = jnp.matmul(x2.T.astype(jnp.float32), dlog)   # [d, chunk]
+        dx = dx + jnp.matmul(dlog, w_c.astype(jnp.float32).T)
+        return dx, dw_c.astype(w.dtype)
+
+    body = jax.checkpoint(body)
+    dx, dw_stack = jax.lax.scan(
+        body, jnp.zeros((t, d), jnp.float32),
+        (jnp.arange(n_chunks), w_stack))
+    dw = dw_stack.swapaxes(0, 1).reshape(d, n_chunks * chunk)[:, :v]
+    return dx.astype(x2.dtype), dw.astype(w.dtype), None
+
+
+chunked_ce.defvjp(_fwd, _bwd)
+
+
+def chunked_ce_loss(x: jax.Array, w: jax.Array, labels: jax.Array, *,
+                    chunk: int = 16384,
+                    logit_softcap: Optional[float] = None,
+                    mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL over [B, S]; never materializes [T, V] logits.
+
+    x [B,S,d]; w [d,V] (pass embed.T for tied embeddings); labels [B,S].
+    """
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    labels1 = labels.reshape(-1)
+    if mask is not None:
+        # fold an explicit mask by zeroing labels' contribution: simplest
+        # correct route is the unchunked path; train shapes don't mask.
+        raise NotImplementedError("chunked CE with loss masks")
+    return chunked_ce(x2, w, labels1, chunk, logit_softcap, ("none", None))
+
+
+def sharded_ce_loss(x: jax.Array, w: jax.Array, labels: jax.Array, *,
+                    logit_softcap: Optional[float] = None) -> jax.Array:
+    """Gather-free CE: the SPMD-native variant (§Perf iteration log).
+
+    The naive loss gathers logits across the vocab-sharded lm_head because
+    of take_along_axis; the scan-chunked variant misaligns chunk boundaries
+    with vocab shards and gathers too. This formulation replaces the label
+    gather with an arithmetic mask so every reduction over V is a partial
+    reduction + tiny all-reduce — GSPMD keeps logits [T, V/tp] resident per
+    device and never moves them.
+    """
+    b, s, d = x.shape
+    t = b * s
+    x2 = x.reshape(t, d)
+    labels1 = labels.reshape(-1)
+    v = w.shape[1]
+    # Pin the layouts GSPMD should use: tokens stay dp-sharded, the head's
+    # contraction dim is gathered (small: d*V bf16) instead of letting the
+    # partitioner all-reduce [T, V/tp] f32 partial logits (67 GB/dev).
+    from repro import runtime_context as rctx
+    mesh = rctx.current_mesh()
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        dp = rctx.current_dp() or None
+        tp = "model" if "model" in mesh.axis_names else None
+        dp_n = 1
+        for a in (dp or ()):
+            dp_n *= mesh.devices.shape[list(mesh.axis_names).index(a)]
+        dp = dp if (dp and t % max(dp_n, 1) == 0) else None
+        cst = jax.lax.with_sharding_constraint
+        x2 = cst(x2, NamedSharding(mesh, P(dp, None)))
+        w = cst(w, NamedSharding(mesh, P(None, tp)))
+        labels1 = cst(labels1, NamedSharding(mesh, P(dp)))
+    logits = jnp.matmul(x2, w, preferred_element_type=jnp.float32)
+    if mesh is not None:
+        logits = cst(logits, NamedSharding(mesh, P(dp, tp)))
+    logits = logits.astype(jnp.float32)
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    m = jnp.max(logits, axis=1)
+    se = jnp.sum(jnp.exp(logits - m[:, None]), axis=1)
+    lse = m + jnp.log(se)
+    hit = labels1[:, None] == jnp.arange(v, dtype=labels1.dtype)[None, :]
+    gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=1)
+    return jnp.mean(lse - gold)

@@ -1,0 +1,65 @@
+"""KV / SSM cache construction for every block kind (stacked over groups)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _attn_cache(cfg, batch: int, max_len: int, dtype):
+    """K/V caches are stored FLAT [B, T, kv_dim]: a flat 16-way sharding of
+
+    kv_dim is GSPMD-reshapeable into the nested (KV x head_dim) sharding the
+    attention einsums want, even when n_kv_heads < the TP width (GQA-8 on
+    TP-16 would otherwise replicate the cache — §Perf cell B)."""
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    if getattr(cfg, "kv_cache_quant", False):
+        # int8 cache + per-(token, head) scales: ~2x decode KV bandwidth
+        return {"k": jnp.zeros((batch, max_len, kvd), jnp.int8),
+                "v": jnp.zeros((batch, max_len, kvd), jnp.int8),
+                "k_scale": jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                     jnp.bfloat16),
+                "v_scale": jnp.zeros((batch, max_len, cfg.n_kv_heads),
+                                     jnp.bfloat16)}
+    return {"k": jnp.zeros((batch, max_len, kvd), dtype),
+            "v": jnp.zeros((batch, max_len, kvd), dtype)}
+
+
+def _mamba_cache(cfg, batch: int, dtype):
+    return {"ssm": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim,
+                              cfg.d_state), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype)}
+
+
+def block_cache(cfg, kind: str, batch: int, max_len: int, dtype):
+    c = {}
+    if kind.startswith("attn") or kind.startswith("hybrid"):
+        c["attn"] = _attn_cache(cfg, batch, max_len, dtype)
+    if kind == "mamba" or kind.startswith("hybrid"):
+        c["mamba"] = _mamba_cache(cfg, batch, dtype)
+    return c
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Stacked cache pytree: leaves have leading n_groups dim."""
+    group = {f"b{i}": block_cache(cfg, kind, batch, max_len, dtype)
+             for i, kind in enumerate(cfg.pattern)}
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_groups,) + l.shape),
+        group)
+
+
+def init_encdec_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Decoder cache: self-attn KV + cross-attn KV (filled at prefill)."""
+    group = {"self": _attn_cache(cfg, batch, max_len, dtype),
+             "cross": {"xk": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                        cfg.head_dim), dtype),
+                       "xv": jnp.zeros((batch, cfg.enc_seq, cfg.n_kv_heads,
+                                        cfg.head_dim), dtype)}}
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape),
+        group)
+
+
+def cache_bytes(cache) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(cache))

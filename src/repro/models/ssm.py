@@ -1,0 +1,162 @@
+"""Mamba2 — state-space duality (SSD) mixer, chunked scan + decode recurrence.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6):
+quadratic attention-like compute inside fixed-size chunks, linear state
+passing across chunks. Decode is the O(1) recurrence on the [B,H,P,N] state.
+All einsums; chunk scan via lax.scan so HLO size is depth-independent.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, rms_norm
+
+CHUNK = 256
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a [..., L] -> M[..., i, j] = sum_{j < k <= i} a_k  (lower-tri)."""
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    ltri = jnp.tril(jnp.ones(a.shape[-1:] * 2, dtype=bool), k=0)
+    return jnp.where(ltri, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, a_dt: jax.Array, b_mat: jax.Array,
+                c_mat: jax.Array, h0: Optional[jax.Array],
+                chunk: int = CHUNK) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x     [B,L,H,P]  (inputs already scaled by dt)
+    a_dt  [B,L,H]    (dt * A, negative)
+    b/c   [B,L,G,N]  (G groups broadcast over heads)
+    h0    [B,H,P,N]  initial state or None
+    Returns (y [B,L,H,P], h_final [B,H,P,N]).
+    """
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    c = l // chunk
+    hg = h // g
+
+    def rs(t):  # [B,L,...] -> [C,B,chunk,...] (scan axis first)
+        return t.reshape(bsz, c, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac = rs(x), rs(a_dt)
+    bc, cc = rs(b_mat), rs(c_mat)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def chunk_step(h_prev, inp):
+        xk, ak, bk, ck = inp                    # [B,chunk,...]
+        acs = jnp.cumsum(ak, axis=1)            # [B,chunk,H]
+        # intra-chunk (diagonal block): attention-like
+        lmat = jnp.exp(_segsum(ak.swapaxes(1, 2)))        # [B,H,chunk,chunk]
+        ckh = jnp.repeat(ck, hg, axis=2)        # [B,chunk,H,N]
+        bkh = jnp.repeat(bk, hg, axis=2)
+        scores = jnp.einsum("blhn,bshn->bhls", ckh.astype(jnp.float32),
+                            bkh.astype(jnp.float32))
+        y_diag = jnp.einsum("bhls,bshp->blhp", scores * lmat,
+                            xk.astype(jnp.float32))
+        # contribution of the incoming state
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp", ckh.astype(jnp.float32),
+                           h_prev, jnp.exp(acs))
+        # chunk state update
+        a_tot = acs[:, -1]                      # [B,H]
+        decay = jnp.exp(a_tot[:, None] - acs)   # [B,chunk,H]
+        h_new = jnp.einsum("blhn,blh,blhp->bhpn", bkh.astype(jnp.float32),
+                           decay, xk.astype(jnp.float32))
+        h_next = h_prev * jnp.exp(a_tot)[:, :, None, None] + h_new
+        return h_next, (y_diag + y_off).astype(x.dtype)
+
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, ac, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(bsz, l, h, p)
+    return y, h_final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array]
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d. x [B,L,C]; w [C,K]; cache [B,K-1,C]."""
+    bsz, l, ch = x.shape
+    k = w.shape[1]
+    if cache is None:
+        xin = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = None
+    else:
+        xin = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xin[:, -(k - 1):, :]
+    out = jax.lax.conv_general_dilated(
+        xin, w.T[:, None, :].astype(x.dtype),    # [K,1,C] kernel
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=ch)
+    return out, new_cache
+
+
+def mamba_block(p: dict, x: jax.Array, cfg, *,
+                cache: Optional[dict] = None,
+                tap=None, use_pallas: bool = False
+                ) -> Tuple[jax.Array, Optional[dict]]:
+    """Mamba2 mixer. cache = {'ssm': [B,H,P,N], 'conv': [B,K-1,convdim]}."""
+    bsz, s, _ = x.shape
+    di, hd = cfg.d_inner, cfg.ssm_headdim
+    nh, g, n = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.d_state
+
+    if tap:
+        tap("in_proj", x)
+    zxbcdt = linear(x, p["in_proj"], use_pallas=use_pallas)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
+
+    conv_cache = cache.get("conv") if cache else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xs, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
+
+    xh = xs.reshape(bsz, s, nh, hd)
+    b_mat = b_mat.reshape(bsz, s, g, n)
+    c_mat = c_mat.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # [H]
+
+    h0 = cache.get("ssm") if cache else None
+    if s == 1 and cache is not None:
+        # O(1) decode recurrence
+        da = jnp.exp(dt[:, 0] * a[None, :])                   # [B,H]
+        bh = jnp.repeat(b_mat[:, 0], nh // g, axis=1)         # [B,H,N]
+        bx = jnp.einsum("bhp,bhn->bhpn",
+                        (xh[:, 0] * dt[:, 0, :, None]).astype(jnp.float32),
+                        bh.astype(jnp.float32))
+        h_new = h0 * da[:, :, None, None] + bx
+        ch = jnp.repeat(c_mat[:, 0], nh // g, axis=1)         # [B,H,N]
+        y = jnp.einsum("bhpn,bhn->bhp", h_new, ch.astype(jnp.float32))
+        y = y[:, None].astype(x.dtype)                        # [B,1,H,P]
+        h_final = h_new
+    else:
+        chunk = CHUNK if s >= CHUNK else max(8, 1 << (s - 1).bit_length())
+        pad = (-s) % chunk
+        if pad:
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, h_final = ssd_chunked(xh * dt[..., None].astype(xh.dtype),
+                                 dt * a[None, None, :], b_mat, c_mat,
+                                 h0, chunk=chunk)
+        y = y[:, :s].astype(x.dtype)
+
+    y = y + xh[:, :s] * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    if tap:
+        tap("out_proj", y)
+    out = linear(y, p["out_proj"], use_pallas=use_pallas, tp_dim=0)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": h_final, "conv": new_conv}
+    return out, new_cache

@@ -1,0 +1,88 @@
+"""AdamW in pure JAX with configurable moment dtype.
+
+Moments default to fp32; the 314B/398B train cells use bf16 moments so the
+optimizer state fits 256 x 16 GB with FSDP (state inherits each param's
+sharding spec — ZeRO-3). No master copy: params are the canonical values
+(bf16 or fp32 per model dtype); the update math runs in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"      # "bfloat16" for the giant models
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, cfg: AdamWConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    m=jax.tree_util.tree_map(zeros, params),
+                    v=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig,
+           lr_scale: jax.Array = 1.0) -> Tuple[Any, OptState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip else 1.0
+    dt = jnp.dtype(cfg.moment_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * clip
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh, vh = m32 / c1, v32 / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m32.astype(dt), v32.astype(dt))
+
+    out = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+def lr_schedule(step: jax.Array, *, warmup: int = 100,
+                total: int = 10_000, min_frac: float = 0.1) -> jax.Array:
+    """Linear warmup + cosine decay multiplier."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / max(warmup, 1), 1.0)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return warm * cos

@@ -1,0 +1,75 @@
+"""Int8 gradient compression with error feedback, for the slow pod edge.
+
+The paper's insight — aggressive low-bit quantization with outlier
+protection — applied to *distributed training traffic*: cross-pod gradient
+all-reduce is the bandwidth-starved link (ICI within a pod, DCI between
+pods), so gradients are quantized to int8 per-tensor-chunk before the
+cross-pod psum and dequantized after, with an error-feedback accumulator
+preserving convergence (residual of the quantization is added to the next
+step's gradient).
+
+Used by the trainer when mesh has a "pod" axis and cfg enables compression.
+The compress/decompress pair is pure jnp so GSPMD places the quantized
+(4x smaller) tensor on the wire.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048
+
+
+def _quantize_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    flat = g.reshape(-1)
+    pad = (-flat.size) % CHUNK
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(-1, CHUNK)
+    scale = jnp.max(jnp.abs(chunks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(chunks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """grads + error-feedback -> (quantized pytree {q, scale}, new_err)."""
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        q, s = _quantize_int8(g32)
+        deq = _dequantize_int8(q, s, g.shape)
+        return {"q": q, "scale": s}, (g32 - deq)
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    qs, es = [], []
+    for g, e in zip(flat_g, flat_e):
+        qq, ee = one(g, e)
+        qs.append(qq)
+        es.append(ee)
+    return (jax.tree_util.tree_unflatten(tdef, qs),
+            jax.tree_util.tree_unflatten(tdef, es))
+
+
+def decompress(qtree: Any, shapes: Any) -> Any:
+    def one(q, ref):
+        return _dequantize_int8(q["q"], q["scale"], ref.shape).astype(
+            ref.dtype)
+    flat_q, tdef = jax.tree_util.tree_flatten(
+        qtree, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    return jax.tree_util.tree_unflatten(
+        tdef, [one(q, r) for q, r in zip(flat_q, flat_s)])
+
+
+def init_error(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

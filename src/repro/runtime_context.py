@@ -1,0 +1,32 @@
+"""Trace-time runtime context: the active mesh for shard_map-based ops.
+
+Step builders (serve/train/dryrun) set the mesh before tracing; model code
+reads it inside matmul dispatch. Trace-time constant — never crosses into
+runtime values.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+_MESH = None
+_DP: Tuple[str, ...] = ()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, dp: Tuple[str, ...] = ()):
+    global _MESH, _DP
+    prev, prev_dp = _MESH, _DP
+    _MESH, _DP = mesh, tuple(dp)
+    try:
+        yield
+    finally:
+        _MESH, _DP = prev, prev_dp
+
+
+def current_mesh():
+    return _MESH
+
+
+def current_dp() -> Tuple[str, ...]:
+    return _DP

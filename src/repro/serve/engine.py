@@ -1,0 +1,117 @@
+"""Batched serving engine: request queue -> prefill -> interleaved decode.
+
+Continuous-batching-lite: requests are grouped into fixed-size slots; a slot
+becomes free when its sequence emits EOS or hits max_new_tokens, and the
+next queued request is prefilled into it. Weights may be dense bf16 or the
+QMC serving format (ShardedQTensor / QTensor stacks) — the engine is
+agnostic; matmul dispatch handles it.
+
+Single-process implementation (CPU container); the pjit'd steps are the
+same ones the multi-pod dry-run lowers for the 256/512-chip meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray               # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.stats = EngineStats()
+        self._decode = jax.jit(
+            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
+
+    def _prefill_one(self, prompt: np.ndarray):
+        tokens = jnp.asarray(prompt)[None, :]
+        logits, cache = prefill(self.cfg, self.params, tokens,
+                                max_len=self.max_len,
+                                cache_dtype=self.cache_dtype)
+        self.stats.prefills += 1
+        return int(jnp.argmax(logits[0])), cache
+
+    def run(self, requests: List[Request],
+            greedy: bool = True) -> List[Request]:
+        """Process all requests to completion; returns them with outputs."""
+        t0 = time.monotonic()
+        queue = list(requests)
+        # slot state: per-slot cache (batch dim 1) + active request
+        active: List[Optional[Request]] = [None] * self.slots
+        caches: List = [None] * self.slots
+        positions = [0] * self.slots
+        next_tok = [0] * self.slots
+
+        def refill():
+            for s in range(self.slots):
+                if active[s] is None and queue:
+                    req = queue.pop(0)
+                    tok, cache = self._prefill_one(req.prompt)
+                    active[s] = req
+                    caches[s] = cache
+                    positions[s] = len(req.prompt)
+                    next_tok[s] = tok
+                    req.out_tokens.append(tok)
+                    self.stats.tokens_out += 1
+
+        refill()
+        while any(a is not None for a in active):
+            for s in range(self.slots):
+                req = active[s]
+                if req is None:
+                    continue
+                if len(req.out_tokens) >= req.max_new_tokens or \
+                        (req.eos_id is not None
+                         and req.out_tokens[-1] == req.eos_id) or \
+                        positions[s] + 1 >= self.max_len:
+                    req.done = True
+                    active[s] = None
+                    caches[s] = None
+                    continue
+                tok = jnp.asarray([[next_tok[s]]], jnp.int32)
+                logits, caches[s] = self._decode(
+                    self.params, tok, caches[s],
+                    jnp.asarray(positions[s], jnp.int32))
+                positions[s] += 1
+                nxt = int(jnp.argmax(logits[0]))
+                next_tok[s] = nxt
+                req.out_tokens.append(nxt)
+                self.stats.decode_steps += 1
+                self.stats.tokens_out += 1
+            refill()
+        self.stats.wall_s = time.monotonic() - t0
+        return requests

@@ -1,0 +1,95 @@
+"""Serving step builders: pjit'd prefill and decode with sharded caches
+
+and QMC-quantized weights (the paper's deployment configuration).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import runtime_context as ctx
+from repro.launch import mesh as meshlib
+from repro.launch import sharding as shd
+from repro.models import kvcache as KV
+from repro.models.config import ModelConfig
+from repro.models.model import decode_step as _decode
+from repro.models.model import prefill as _prefill
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    if cfg.is_encdec:
+        return {"b0": jax.eval_shape(
+            lambda: KV.init_encdec_cache(cfg, batch, max_len, dtype))}
+    return jax.eval_shape(lambda: KV.init_cache(cfg, batch, max_len, dtype))
+
+
+def build_prefill(cfg: ModelConfig, mesh, *, batch: int, seq: int,
+                  cache_len: Optional[int] = None, params_struct=None,
+                  scan_layers: bool = True):
+    """Returns (fn, jit_fn). fn(params, tokens, extras...) ->
+
+    (last_logits, cache)."""
+    cache_len = cache_len or seq + cfg.n_vis_tokens
+
+    def fn(params, tokens, extras):
+        with ctx.use_mesh(mesh, meshlib.dp_axes(mesh)):
+            return _prefill(cfg, params, tokens, max_len=cache_len,
+                            vis_embeds=extras.get("vis_embeds"),
+                            frames=extras.get("frames"),
+                            scan_layers=scan_layers)
+
+    def make_jit(params_struct, extras_struct=None):
+        p_sh = shd.shard_params_tree(params_struct, mesh)
+        t_sh = NamedSharding(mesh, shd.batch_spec(mesh, batch))
+        c_struct = cache_struct(cfg, batch, cache_len)
+        c_sh = shd.shard_cache_tree(c_struct, mesh, batch)
+        l_sh = _logits2d(mesh, batch, cfg)
+        e_sh = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, shd.batch_spec(mesh, batch)),
+            extras_struct or {})
+        return jax.jit(fn, in_shardings=(p_sh, t_sh, e_sh),
+                       out_shardings=(l_sh, c_sh))
+    return fn, make_jit
+
+
+def build_decode(cfg: ModelConfig, mesh, *, batch: int, cache_len: int,
+                 scan_layers: bool = True):
+    """Returns (fn, make_jit). fn(params, token, cache, pos) ->
+
+    (logits, cache). Cache is donated (in-place update)."""
+    def fn(params, token, cache, pos):
+        with ctx.use_mesh(mesh, meshlib.dp_axes(mesh)):
+            return _decode(cfg, params, token, cache, pos,
+                           scan_layers=scan_layers)
+
+    def make_jit(params_struct):
+        p_sh = shd.shard_params_tree(params_struct, mesh)
+        t_sh = NamedSharding(mesh, shd.batch_spec(mesh, batch))
+        c_struct = cache_struct(cfg, batch, cache_len)
+        c_sh = shd.shard_cache_tree(c_struct, mesh, batch)
+        l_sh = _logits2d(mesh, batch, cfg)
+        pos_sh = NamedSharding(mesh, P())
+        return jax.jit(fn,
+                       in_shardings=(p_sh, t_sh, c_sh, pos_sh),
+                       out_shardings=(l_sh, c_sh),
+                       donate_argnums=(2,))
+    return fn, make_jit
+
+
+def _logits2d(mesh, batch: int, cfg) -> NamedSharding:
+    """[B, V] sharding: batch on dp when divisible; vocab on model when
+
+    divisible (odd vocabs like 92553 replicate)."""
+    bs = shd.batch_spec(mesh, batch)
+    b_ax = None
+    if len(bs) >= 1:
+        b_ax = bs[0] if len(bs) > 0 else None
+    tp_n = meshlib.axis_size(mesh, "model")
+    v_ax = "model" if ("model" in mesh.axis_names
+                       and cfg.vocab % tp_n == 0) else None
+    return NamedSharding(mesh, P(b_ax, v_ax))

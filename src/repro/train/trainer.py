@@ -1,0 +1,149 @@
+"""Training loop: data prefetch, checkpoint/restart, straggler watchdog.
+
+Fault-tolerance contract:
+  * checkpoints are atomic + async (checkpoint/ckpt.py) every
+    `ckpt_every` steps;
+  * on startup, `resume=True` restores the latest checkpoint (elastic:
+    the current mesh's shardings are applied on load);
+  * a StepWatchdog arms a per-step deadline; policy "raise" aborts so the
+    outer launcher restarts from the checkpoint — the standard
+    preemption/node-failure path on TPU fleets;
+  * data is keyed by (seed, host, step): restart replays from the exact
+    batch after the checkpoint step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import CorpusConfig, SyntheticCorpus
+from repro.ft.watchdog import StepWatchdog
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.train.step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 200
+    global_batch: int = 8
+    seq_len: int = 128
+    microbatches: int = 1
+    ckpt_every: int = 100
+    ckpt_dir: Optional[str] = None
+    resume: bool = False
+    log_every: int = 10
+    step_deadline_s: float = 300.0
+    watchdog_policy: str = "log"
+    warmup: int = 20
+    seed: int = 0
+
+
+def train(model_cfg: ModelConfig, train_cfg: TrainConfig,
+          opt_cfg: AdamWConfig = AdamWConfig(), mesh=None,
+          log_fn: Callable[[str], None] = print,
+          extra_batch_fn: Optional[Callable] = None) -> Dict:
+    """Runs the loop; returns {'params','opt','history',...}."""
+    corpus = SyntheticCorpus(CorpusConfig(vocab=model_cfg.vocab,
+                                          seed=train_cfg.seed + 1))
+    key = jax.random.PRNGKey(train_cfg.seed)
+    params = init_params(model_cfg, key)
+    opt_state = adamw.init(params, opt_cfg)
+
+    start_step = 0
+    if train_cfg.resume and train_cfg.ckpt_dir and \
+            ckpt_lib.latest_step(train_cfg.ckpt_dir) is not None:
+        state_like = {"params": params, "opt": opt_state}
+        restored, at = ckpt_lib.restore(state_like, train_cfg.ckpt_dir)
+        params, opt_state = restored["params"], restored["opt"]
+        start_step = at
+        log_fn(f"[trainer] resumed from step {at}")
+
+    step_fn, jit_builder, _ = build_train_step(
+        model_cfg, opt_cfg, mesh, microbatches=train_cfg.microbatches,
+        warmup=train_cfg.warmup, total_steps=train_cfg.steps) \
+        if mesh is not None else (None, None, None)
+
+    if mesh is None:
+        compiled = jax.jit(_single_device_step(model_cfg, opt_cfg,
+                                               train_cfg),
+                           donate_argnums=(0, 1))
+    else:
+        compiled = None  # built lazily on first batch
+
+    def sample(step):
+        b = corpus.sample_batch(train_cfg.global_batch, train_cfg.seq_len,
+                                step=step)
+        if extra_batch_fn:
+            b.update(extra_batch_fn(train_cfg.global_batch,
+                                    train_cfg.seq_len, model_cfg))
+        return b
+
+    loader = PrefetchLoader(sample, start_step=start_step)
+    saver = ckpt_lib.AsyncCheckpointer()
+    watchdog = StepWatchdog(train_cfg.step_deadline_s,
+                            train_cfg.watchdog_policy)
+    history = []
+    try:
+        for _ in range(start_step, train_cfg.steps):
+            step_idx, batch = next(loader)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            watchdog.arm(step_idx)
+            t0 = time.monotonic()
+            if compiled is None:
+                compiled = jit_builder(
+                    jax.eval_shape(lambda: params),
+                    jax.eval_shape(lambda: opt_state),
+                    jax.eval_shape(lambda: batch))
+            params, opt_state, metrics = compiled(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.monotonic() - t0
+            watchdog.disarm()
+            watchdog.check()
+            history.append({"step": step_idx, "time_s": dt, **metrics})
+            if step_idx % train_cfg.log_every == 0:
+                log_fn(f"[trainer] step {step_idx} "
+                       f"loss={metrics['loss']:.4f} "
+                       f"gnorm={metrics['grad_norm']:.2e} {dt*1e3:.0f}ms")
+            if train_cfg.ckpt_dir and (step_idx + 1) % \
+                    train_cfg.ckpt_every == 0:
+                saver.save({"params": params, "opt": opt_state},
+                           train_cfg.ckpt_dir, step_idx + 1)
+    finally:
+        loader.close()
+        watchdog.close()
+        saver.wait()
+
+    if train_cfg.ckpt_dir:
+        ckpt_lib.save({"params": params, "opt": opt_state},
+                      train_cfg.ckpt_dir, train_cfg.steps)
+    return {"params": params, "opt": opt_state, "history": history,
+            "corpus": corpus, "incidents": watchdog.incidents}
+
+
+def _single_device_step(model_cfg, opt_cfg, train_cfg):
+    from repro.models.model import train_loss
+
+    def step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: train_loss(model_cfg, p, batch, remat=False),
+            has_aux=True)(params)
+        lr_scale = adamw.lr_schedule(opt_state.step,
+                                     warmup=train_cfg.warmup,
+                                     total=train_cfg.steps)
+        params, opt_state, om = adamw.update(grads, opt_state, params,
+                                             opt_cfg, lr_scale)
+        return params, opt_state, {"loss": metrics["loss"],
+                                   "aux": metrics["aux"],
+                                   "grad_norm": om["grad_norm"],
+                                   "lr": lr_scale * opt_cfg.lr}
+    return step

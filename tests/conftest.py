@@ -1,0 +1,41 @@
+import os
+import sys
+
+# tests see ONE cpu device (the dry-run subprocess sets its own flags)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.models.config import ModelConfig  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def tiny_dense():
+    return ModelConfig(name="t-dense", family="dense", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                       vocab=128)
+
+
+@pytest.fixture(scope="session")
+def tiny_moe():
+    return ModelConfig(name="t-moe", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                       n_experts=4, topk=2, moe_pattern=(True,))
+
+
+@pytest.fixture(scope="session")
+def tiny_mamba():
+    return ModelConfig(name="t-mamba", family="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, head_dim=1, d_ff=0,
+                       vocab=128, pattern=("mamba",), d_state=16,
+                       ssm_headdim=16)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

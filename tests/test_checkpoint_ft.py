@@ -1,0 +1,104 @@
+"""Checkpoint (atomic/async/restore), elastic resharding, watchdog tests."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.ft.elastic import choose_mesh_shape
+from repro.ft.watchdog import StepWatchdog
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (32, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(t, str(tmp_path), step=7)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored, step = ckpt.restore(jax.eval_shape(lambda: t),
+                                  str(tmp_path))
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_pointer_advances(tmp_path):
+    t = _tree()
+    ckpt.save(t, str(tmp_path), step=1)
+    ckpt.save(t, str(tmp_path), step=2)
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    _, s = ckpt.restore(jax.eval_shape(lambda: t), str(tmp_path))
+    assert s == 2
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    saver = ckpt.AsyncCheckpointer()
+    saver.save(t, str(tmp_path), step=5)
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    restored, _ = ckpt.restore(jax.eval_shape(lambda: t), str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_restore_with_shardings(tmp_path):
+    """Elastic path: restore onto an explicit (1-device) mesh sharding."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = _tree()
+    ckpt.save(t, str(tmp_path), step=3)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    sh = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), t)
+    restored, _ = ckpt.restore(jax.eval_shape(lambda: t), str(tmp_path),
+                               shardings=sh)
+    assert restored["a"].sharding.mesh.shape["data"] == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = _tree()
+    ckpt.save(t, str(tmp_path), step=1)
+    bad = {"a": jnp.zeros((8, 8)), "nested": t["nested"]}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(jax.eval_shape(lambda: bad), str(tmp_path))
+
+
+@pytest.mark.parametrize("n,tp_expected", [(512, 16), (256, 16), (128, 16),
+                                           (24, 8), (6, 2), (7, 1)])
+def test_choose_mesh_shape(n, tp_expected):
+    shape, axes = choose_mesh_shape(n, want_tp=16)
+    total = 1
+    for s in shape:
+        total *= s
+    assert total <= n
+    if "model" in axes:
+        assert shape[axes.index("model")] == tp_expected
+
+
+def test_watchdog_logs_incident():
+    wd = StepWatchdog(deadline_s=0.05, policy="log")
+    wd.arm(step=3)
+    time.sleep(0.15)
+    wd.disarm()
+    assert len(wd.incidents) == 1
+    assert wd.incidents[0].step == 3
+    wd.check()  # log policy: no raise
+
+
+def test_watchdog_raise_policy():
+    wd = StepWatchdog(deadline_s=0.05, policy="raise")
+    wd.arm(step=1)
+    time.sleep(0.15)
+    wd.disarm()
+    with pytest.raises(TimeoutError):
+        wd.check()

@@ -1,0 +1,71 @@
+"""Dry-run machinery test — runs in a SUBPROCESS so the forced host device
+
+count (8 here; 512 in production) never leaks into the main pytest jax."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+SCRIPT = r"""
+import repro.launch.dryrun as dr
+import jax
+from repro.launch import mesh as meshlib
+from repro.launch import roofline as rl
+from repro.configs import reduced_config
+from repro.configs.shapes import ShapeSuite
+import json, sys
+
+assert len(jax.devices()) == 8, jax.devices()
+mesh = meshlib.make_mesh((2, 2, 2), ("pod", "data", "model"))
+out = {}
+for arch in ["gemma2-2b", "dbrx-132b", "mamba2-370m"]:
+    cfg = reduced_config(arch)
+    for suite in [ShapeSuite("t", "train", 32, 8),
+                  ShapeSuite("d", "decode", 32, 8)]:
+        lowered, compiled, extra = dr.lower_cell(
+            arch, suite.name, multi_pod=True, mesh=mesh, cfg=cfg,
+            suite=suite)
+        cost = dict(compiled.cost_analysis() or {})
+        coll = rl.collective_bytes(compiled.as_text())
+        out[f"{arch}/{suite.kind}"] = {
+            "flops": float(cost.get("flops", 0)),
+            "coll": coll["total"], "n_coll": coll["count"]}
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_small():
+    env = dict(os.environ, DRYRUN_DEVICES="8",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert len(out) == 6
+    for k, v in out.items():
+        assert v["flops"] > 0, k
+        # the pod axis forces cross-pod collectives in the train steps
+        if "train" in k:
+            assert v["n_coll"] > 0, k
+
+
+def test_production_artifacts_if_present():
+    """Validate the real 512-device sweep artifacts when they exist."""
+    d = os.path.join(ROOT, "artifacts", "dryrun")
+    if not os.path.isdir(d) or not os.listdir(d):
+        pytest.skip("production dry-run artifacts not generated yet")
+    recs = [json.load(open(os.path.join(d, f))) for f in os.listdir(d)
+            if f.endswith(".json")]
+    ok = [r for r in recs if r.get("ok")]
+    assert len(ok) >= 60, f"only {len(ok)} cells passed"
+    meshes = {r["mesh"] for r in ok}
+    assert {"pod16x16", "pod2x16x16"} <= meshes
+    for r in ok:
+        assert r["roofline"]["flops_per_dev"] > 0, (r["arch"], r["shape"])

@@ -1,0 +1,74 @@
+"""Noise model, bit-packing, and partitioning tests."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import partition as part
+from repro.core.noise import ber_from_confusion, confusion_matrix, \
+    perturb_codes
+from repro.core.packing import cells_per_weight, pack_codes, packed_nbytes, \
+    unpack_codes
+from repro.core.qconfig import NoiseModel
+
+
+def test_confusion_rows_sum_to_one():
+    for bits in (2, 3):
+        m = np.asarray(confusion_matrix(bits, NoiseModel.for_mode(bits)))
+        np.testing.assert_allclose(m.sum(axis=1), 1.0, atol=1e-7)
+        assert m.shape == (2 ** bits,) * 2
+
+
+def test_2bit_mode_less_noisy_than_3bit():
+    assert ber_from_confusion(2, NoiseModel.for_mode(2)) < \
+        ber_from_confusion(3, NoiseModel.for_mode(3))
+
+
+def test_empirical_flip_rate():
+    noise = NoiseModel(cell_bits=3, p_minus=0.02, p_plus=0.03)
+    codes = jnp.zeros((200_000,)) + 1  # interior state
+    noisy = perturb_codes(jax.random.PRNGKey(0), codes, 3, noise)
+    d = np.asarray(noisy - codes)
+    assert abs((d == -1).mean() - 0.02) < 0.003
+    assert abs((d == 1).mean() - 0.03) < 0.003
+    assert np.all(np.isin(d, [-1, 0, 1]))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(2, 8), st.integers(1, 500))
+def test_pack_roundtrip(bits, n):
+    rng = np.random.default_rng(bits * 1000 + n)
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    codes = rng.integers(lo, hi + 1, size=n)
+    packed = pack_codes(codes, bits)
+    assert packed.nbytes == packed_nbytes(n, bits)
+    out = np.asarray(unpack_codes(packed, bits, n))
+    np.testing.assert_array_equal(out, codes)
+
+
+def test_cells_per_weight_paper_modes():
+    assert cells_per_weight(3, 3) == 1.0     # 3-bit MLC: 1 cell/weight
+    assert cells_per_weight(3, 2) == 1.5     # 2-bit MLC packing mismatch
+
+
+def test_scalar_partition_fraction_and_identity():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    for rho in (0.1, 0.3, 0.5):
+        w_in, w_out = part.partition(w, rho, "scalar")
+        np.testing.assert_allclose(np.asarray(w_in + w_out),
+                                   np.asarray(w), rtol=0, atol=0)
+        frac = float((jnp.abs(w_out) > 0).mean())
+        assert abs(frac - rho) < 0.02
+
+
+def test_subtile_partition_exact_count():
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 512))   # 8x4 subtiles
+    mask = part.subtile_outlier_mask(w, 0.25, (8, 128))
+    assert int(mask.sum()) == round(0.25 * mask.size)
+    em = part.expand_subtile_mask(mask, w.shape, (8, 128))
+    assert em.shape == w.shape
+    # top-scoring subtile must be selected
+    scores = part.subtile_scores(w, (8, 128))
+    top = np.unravel_index(int(jnp.argmax(scores)), scores.shape)
+    assert bool(mask[top])

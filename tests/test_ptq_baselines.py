@@ -1,0 +1,95 @@
+"""MXINT4 / GPTQ / AWQ baseline correctness + model-level PTQ pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apply import quantize_model
+from repro.core.awq import awq_quantize
+from repro.core.gptq import gptq_quantize
+from repro.core.mx import mx_fake_quant
+from repro.core.qconfig import (AWQConfig, GPTQConfig, MXConfig, QMCConfig)
+from repro.core.quantizers import rtn_quantize
+
+
+def _calib(key, n, din):
+    # activations with per-channel variance spread (realistic for LLMs)
+    scales = jnp.exp(jax.random.normal(key, (din,)))
+    return jax.random.normal(jax.random.PRNGKey(9), (n, din)) * scales
+
+
+def test_mx_better_than_rtn_on_blockwise_data():
+    """Per-block shared exponents preserve the small-magnitude blocks that
+
+    a whole-channel RTN scale flushes to zero."""
+    scales = jnp.where(jnp.arange(8)[:, None] % 2 == 0, 0.01, 10.0)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (8, 32)) *
+         scales).reshape(256, 1)
+    w = jnp.tile(w, (1, 16))
+    small = jnp.abs(w) < 0.05
+    q_mx = mx_fake_quant(w, MXConfig(block=32, block_axis=0))
+    q_rtn = rtn_quantize(w, 4)
+    rel_mx = float(jnp.sum(jnp.square((w - q_mx) * small))
+                   / jnp.sum(jnp.square(w * small)))
+    rel_rtn = float(jnp.sum(jnp.square((w - q_rtn) * small))
+                    / jnp.sum(jnp.square(w * small)))
+    assert rel_mx < rel_rtn      # RTN flushes small blocks to zero (==1.0)
+    assert rel_mx < 0.5
+
+
+def test_gptq_beats_rtn_on_layer_output():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.t(key, df=4.0, shape=(64, 48))
+    x = _calib(jax.random.PRNGKey(3), 256, 64)
+    wq_gptq = jnp.asarray(gptq_quantize(w, x, GPTQConfig(bits=4)))
+    wq_rtn = rtn_quantize(w, 4)
+    e_gptq = float(jnp.mean(jnp.square(x @ w - x @ wq_gptq)))
+    e_rtn = float(jnp.mean(jnp.square(x @ w - x @ wq_rtn)))
+    assert e_gptq < e_rtn
+
+
+def test_awq_beats_rtn_on_layer_output():
+    key = jax.random.PRNGKey(4)
+    w = jax.random.t(key, df=4.0, shape=(64, 48))
+    x = _calib(jax.random.PRNGKey(5), 256, 64)
+    wq_awq = jnp.asarray(awq_quantize(w, x, AWQConfig(bits=4)))
+    wq_rtn = rtn_quantize(w, 4)
+    e_awq = float(jnp.mean(jnp.square(x @ w - x @ wq_awq)))
+    e_rtn = float(jnp.mean(jnp.square(x @ w - x @ wq_rtn)))
+    assert e_awq <= e_rtn * 1.0001
+
+
+def test_quantize_model_walks_tree(tiny_dense):
+    from repro.models.model import init_params, train_loss
+    params = init_params(tiny_dense, jax.random.PRNGKey(0))
+    for method in ("rtn4", "mx4", "qmc", "qmc_subtile"):
+        q = quantize_model(params, method=method,
+                           qmc=QMCConfig(rho=0.3), min_dim=32)
+        # embeddings/norms untouched; weights changed
+        np.testing.assert_array_equal(
+            np.asarray(q["embed"]["tok"]),
+            np.asarray(params["embed"]["tok"]))
+        wq = np.asarray(jax.tree_util.tree_leaves(q["blocks"])[0])
+        assert q["blocks"].keys() == params["blocks"].keys()
+        # loss still computes
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                    tiny_dense.vocab)
+        loss, _ = train_loss(tiny_dense, q,
+                             {"tokens": tokens, "labels": tokens},
+                             remat=False)
+        assert np.isfinite(float(loss))
+
+
+def test_quantize_model_gptq_with_taps(tiny_dense):
+    """Calibration capture -> GPTQ on captured inputs, per layer."""
+    from repro.models.model import forward, init_params
+    params = init_params(tiny_dense, jax.random.PRNGKey(0))
+    taps = {}
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                tiny_dense.vocab)
+    forward(tiny_dense, params, tokens, taps=taps, scan_layers=False)
+    assert any("wq" in k for k in taps)
+    q = quantize_model(params, method="gptq", taps=taps, min_dim=32)
+    changed = np.asarray(jax.tree_util.tree_leaves(q["blocks"])[0])
+    orig = np.asarray(jax.tree_util.tree_leaves(params["blocks"])[0])
+    assert changed.shape == orig.shape

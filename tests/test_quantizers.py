@@ -1,0 +1,128 @@
+"""Unit + property tests for the quantizer layer (Algorithm 1 pieces)."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import qmc as qmclib
+from repro.core.noise import perturb_codes
+from repro.core.qconfig import NoiseModel, QMCConfig
+from repro.core.quantizers import (expected_noise_mse, fake_quant,
+                                   minmax_scale, mse_scale_search,
+                                   noise_aware_scale_search, qrange,
+                                   quantize_codes, rtn_quantize)
+
+finite_floats = st.floats(-10.0, 10.0, allow_nan=False,
+                          allow_infinity=False, width=32)
+
+
+@settings(deadline=None, max_examples=25)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=4, max_side=64),
+                  elements=finite_floats),
+       st.integers(2, 8))
+def test_fake_quant_error_bound(w, bits):
+    """|w - Q(w)| <= scale/2 for in-range values with minmax scaling."""
+    s = minmax_scale(jnp.asarray(w), bits)
+    deq = fake_quant(jnp.asarray(w), s, bits)
+    err = np.abs(np.asarray(deq) - w)
+    bound = np.broadcast_to(np.asarray(s), w.shape) * 0.5 + 1e-6
+    # values at the negative clip edge can exceed scale/2 by one step
+    assert np.all(err <= bound * 2 + 1e-5)
+
+
+@settings(deadline=None, max_examples=25)
+@given(hnp.arrays(np.float32, (16, 32), elements=finite_floats),
+       st.integers(2, 6))
+def test_codes_in_range(w, bits):
+    s = minmax_scale(jnp.asarray(w), bits)
+    q = np.asarray(quantize_codes(jnp.asarray(w), s, bits))
+    lo, hi = qrange(bits)
+    assert q.min() >= lo and q.max() <= hi
+
+
+def test_mse_search_beats_minmax():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.t(key, df=3.0, shape=(256, 128))  # heavy tails
+    bits = 3
+    s_mm = minmax_scale(w, bits)
+    s_opt = mse_scale_search(w, bits)
+    e_mm = float(jnp.sum(jnp.square(w - fake_quant(w, s_mm, bits))))
+    e_opt = float(jnp.sum(jnp.square(w - fake_quant(w, s_opt, bits))))
+    assert e_opt <= e_mm * 1.0001
+
+
+def test_noise_aware_scale_smaller_and_better_under_noise():
+    """Eq. 5-7: the noise term s^2*N*p pushes the optimal scale down, and
+
+    the resulting expected distortion under noise must be <= the
+    noise-blind optimum's."""
+    key = jax.random.PRNGKey(1)
+    w = jax.random.t(key, df=4.0, shape=(512, 64))
+    noise = NoiseModel(cell_bits=3, p_minus=0.05, p_plus=0.05)
+    s_blind = mse_scale_search(w, 3)
+    s_aware = noise_aware_scale_search(w, 3, noise)
+    assert float(jnp.mean(s_aware)) <= float(jnp.mean(s_blind)) + 1e-7
+    l_blind = float(expected_noise_mse(w, s_blind, 3, noise))
+    l_aware = float(expected_noise_mse(w, s_aware, 3, noise))
+    assert l_aware <= l_blind * 1.0001
+
+
+def test_qmc_beats_rtn_on_heavy_tails():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.t(key, df=2.5, shape=(512, 256))
+    cfg = QMCConfig(rho=0.3)
+    res = qmclib.qmc_quantize(w, cfg)
+    e_qmc = float(qmclib.quantization_mse(w, res.w_hat))
+    e_rtn = float(qmclib.quantization_mse(w, rtn_quantize(w, 4)))
+    assert e_qmc < e_rtn
+
+
+def test_qmc_mse_decreases_with_rho():
+    key = jax.random.PRNGKey(3)
+    w = jax.random.t(key, df=3.0, shape=(256, 256))
+    errs = []
+    for rho in (0.05, 0.2, 0.4):
+        res = qmclib.qmc_quantize(w, QMCConfig(rho=rho))
+        errs.append(float(qmclib.quantization_mse(w, res.w_hat)))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_merge_identity():
+    """Step 4: scatter(W_in*, W_out*) covers every position exactly once."""
+    key = jax.random.PRNGKey(4)
+    w = jax.random.normal(key, (128, 128))
+    res = qmclib.qmc_quantize(w, QMCConfig(rho=0.25))
+    in_zero = np.asarray(res.codes_in)[np.asarray(res.outlier_mask)]
+    out_zero = np.asarray(res.codes_out)[~np.asarray(res.outlier_mask)]
+    assert np.all(in_zero == 0) and np.all(out_zero == 0)
+
+
+def test_noise_aware_robustness_end_to_end():
+    """Paper's core claim: under ReRAM noise, noise-aware scales lose less
+
+    accuracy (MSE proxy) than noise-blind scales, averaged over draws."""
+    key = jax.random.PRNGKey(5)
+    w = jax.random.t(key, df=3.0, shape=(512, 128))
+    cfg = QMCConfig(rho=0.3, cell_bits=3)
+    import dataclasses
+    noisy_cfg = dataclasses.replace(cfg)  # same; noise from cfg.noise
+    res_aware = qmclib.qmc_quantize(w, cfg, noise_aware=True)
+    res_blind = qmclib.qmc_quantize(w, cfg, noise_aware=False)
+    e_aware = e_blind = 0.0
+    for i in range(8):
+        k = jax.random.PRNGKey(100 + i)
+        e_aware += float(qmclib.quantization_mse(
+            w, qmclib.apply_reram_noise(k, res_aware, cfg)))
+        e_blind += float(qmclib.quantization_mse(
+            w, qmclib.apply_reram_noise(k, res_blind, noisy_cfg)))
+    assert e_aware <= e_blind * 1.001
+
+
+def test_compression_ratio_matches_paper():
+    cfg = QMCConfig(rho=0.3, bits_in=3, bits_out=5)
+    assert abs(cfg.avg_bits - 3.6) < 1e-9
+    assert abs(cfg.compression_vs_fp16 - 4.444444) < 1e-3

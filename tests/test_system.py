@@ -1,0 +1,90 @@
+"""End-to-end system behaviour: train -> PTQ (all methods) -> evaluate ->
+
+serve. This is the paper's full pipeline on a synthetic-corpus SLM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apply import quantize_model
+from repro.core.qconfig import QMCConfig
+from repro.data.synthetic import SyntheticCorpus
+from repro.models.config import ModelConfig
+from repro.models.model import forward
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, train
+
+CFG = ModelConfig(name="sys", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab=128)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    tc = TrainConfig(steps=120, global_batch=16, seq_len=64,
+                     log_every=1000, warmup=10)
+    return train(CFG, tc, AdamWConfig(lr=2e-3), log_fn=lambda s: None)
+
+
+def _ppl(params, corpus, n=4):
+    tot, cnt = 0.0, 0
+    for b in corpus.heldout_ppl_batches(n, 16, 64):
+        logits, _, _ = forward(CFG, params, jnp.asarray(b["tokens"]))
+        logits = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, jnp.asarray(
+            b["labels"])[..., None], -1)[..., 0]
+        tot += float(jnp.sum(lse - gold))
+        cnt += b["labels"].size
+    return float(np.exp(tot / cnt))
+
+
+def test_full_pipeline_ordering(trained):
+    """The paper's Table-2 ordering on our trained SLM:
+
+    fp16 <= QMC < RTN-INT4 in PPL (QMC close to fp16)."""
+    corpus: SyntheticCorpus = trained["corpus"]
+    params = trained["params"]
+    ppl_fp = _ppl(params, corpus)
+    qmc = quantize_model(params, method="qmc",
+                         qmc=QMCConfig(rho=0.3), min_dim=64)
+    rtn = quantize_model(params, method="rtn4", min_dim=64)
+    ppl_qmc = _ppl(qmc, corpus)
+    ppl_rtn = _ppl(rtn, corpus)
+    assert ppl_fp <= ppl_qmc * 1.02
+    assert ppl_qmc < ppl_rtn
+    # QMC stays within a reasonable envelope of fp16
+    assert ppl_qmc < ppl_fp * 1.5
+
+
+def test_noise_robustness_pipeline(trained):
+    """Under simulated ReRAM noise, noise-aware QMC degrades less than a
+
+    noise-blind variant of the same format (paper §3.4)."""
+    corpus: SyntheticCorpus = trained["corpus"]
+    params = trained["params"]
+    deltas = {"aware": [], "blind": []}
+    for i in range(3):
+        key = jax.random.PRNGKey(50 + i)
+        q_aware = quantize_model(params, method="qmc",
+                                 qmc=QMCConfig(rho=0.3, cell_bits=3),
+                                 noise_key=key, noise_aware=True,
+                                 min_dim=64)
+        q_blind = quantize_model(params, method="qmc",
+                                 qmc=QMCConfig(rho=0.3, cell_bits=3),
+                                 noise_key=key, noise_aware=False,
+                                 min_dim=64)
+        deltas["aware"].append(_ppl(q_aware, corpus, n=2))
+        deltas["blind"].append(_ppl(q_blind, corpus, n=2))
+    assert np.mean(deltas["aware"]) <= np.mean(deltas["blind"]) * 1.02
+
+
+def test_serve_trained_model(trained):
+    from repro.serve.engine import Request, ServeEngine
+    corpus: SyntheticCorpus = trained["corpus"]
+    b = corpus.sample_batch(3, 12, step=5_000_000)
+    reqs = [Request(uid=i, prompt=b["tokens"][i], max_new_tokens=8)
+            for i in range(3)]
+    eng = ServeEngine(CFG, trained["params"], slots=2, max_len=32)
+    eng.run(reqs)
+    assert all(len(r.out_tokens) == 8 for r in reqs)
+    assert eng.stats.tokens_per_s > 0
