@@ -13,8 +13,10 @@ import traceback
 
 def main() -> None:
     from benchmarks import (fig3, fig4, granularity, kernels,
-                            roofline_report, table2, table3, table4)
+                            roofline_report, serving, table2, table3,
+                            table4)
     suites = {
+        "serving": serving.run,     # legacy vs paged engine throughput
         "table2": table2.run,       # FP16/RTN/MXINT4/QMC quality
         "table3": table3.run,       # AWQ/GPTQ/QMC(no-noise)
         "fig3": fig3.run,           # rho sweep: PPL + energy/latency

@@ -1,0 +1,101 @@
+"""Serving throughput: legacy per-slot engine vs paged continuous batching.
+
+Runs a fixed synthetic workload through both engines at slots ∈ {1, 4, 8},
+prints the standard ``name,us_per_call,derived`` CSV rows, and writes
+``BENCH_serving.json`` with tokens/s and p50/p95 per-token decode latency
+per configuration, plus the memsys paged-KV traffic summary the §4 DSE
+consumes.
+
+  PYTHONPATH=src python -m benchmarks.serving
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.memsys.workload import kv_traffic_paged
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+
+CFG = ModelConfig(name="serve-bench", family="dense", n_layers=2,
+                  d_model=128, n_heads=8, n_kv_heads=2, d_ff=256, vocab=256)
+N_REQ = 8
+MAX_NEW = 16
+MAX_LEN = 64
+PAGE = 16
+
+
+def _requests(seed: int = 7):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(2, CFG.vocab,
+                                        size=int(L)).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, L in enumerate(rng.integers(8, 24, size=N_REQ))]
+
+
+def _pcts(lat):
+    if not lat:
+        return 0.0, 0.0
+    return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)))
+
+
+def _measure(engine_cls, params, slots: int, **kw):
+    # warm-up run pays every jit compile; second run is steady state
+    engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw).run(
+        _requests())
+    eng = engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw)
+    out = eng.run(_requests())
+    toks = sum(len(r.out_tokens) for r in out)
+    p50, p95 = _pcts(eng.stats.per_token_latencies())
+    return {"tokens": toks, "tokens_per_s": toks / eng.stats.wall_s,
+            "wall_s": eng.stats.wall_s, "decode_calls":
+            eng.stats.decode_steps, "prefills": eng.stats.prefills,
+            "p50_token_latency_us": p50 * 1e6,
+            "p95_token_latency_us": p95 * 1e6,
+            "preemptions": eng.stats.preemptions,
+            "pages_peak": eng.stats.pages_peak}
+
+
+def run() -> dict:
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    results = {"config": {"model": CFG.name, "n_requests": N_REQ,
+                          "max_new_tokens": MAX_NEW, "max_len": MAX_LEN,
+                          "page": PAGE},
+               "slots": {}}
+    for slots in (1, 4, 8):
+        legacy = _measure(LegacyServeEngine, params, slots)
+        paged = _measure(ServeEngine, params, slots, page_size=PAGE)
+        speedup = paged["tokens_per_s"] / max(legacy["tokens_per_s"], 1e-9)
+        results["slots"][str(slots)] = {"legacy": legacy, "paged": paged,
+                                        "speedup": speedup}
+        print(f"serving/legacy_s{slots},"
+              f"{legacy['p50_token_latency_us']:.0f},"
+              f"{legacy['tokens_per_s']:.1f}tok/s")
+        print(f"serving/paged_s{slots},"
+              f"{paged['p50_token_latency_us']:.0f},"
+              f"{paged['tokens_per_s']:.1f}tok/s "
+              f"speedup={speedup:.2f}x")
+    # batch-dependent KV stream at the moment every request is full-length
+    lens = [len(r.prompt) + MAX_NEW for r in _requests()]
+    t = kv_traffic_paged(CFG, lens, page=PAGE)
+    results["paged_kv_traffic"] = {
+        "n_pages": t.n_pages,
+        "kv_bits_per_step": t.kv_bits_per_step,
+        "frag_bits_per_step": t.frag_bits_per_step,
+        "utilization": t.utilization}
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"serving/json,0,{os.path.abspath(OUT)}")
+    return results
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

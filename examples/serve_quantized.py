@@ -1,8 +1,10 @@
 """Batched serving with QMC deployment-format weights (ShardedQTensor):
 
-the paper's edge-inference scenario. Requests stream through the engine
-with continuous slot refill; weights live in the dual-stream packed format
-and are dequantized at the matmul (the Model Weight Controller path).
+the paper's edge-inference scenario. Requests stream through the paged
+continuous-batching engine — all active slots decode in one jit'd step
+against the shared paged KV pool, while weights live in the dual-stream
+packed format and are dequantized at the matmul (the Model Weight
+Controller path). The legacy per-slot engine runs as the baseline.
 
   PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -15,7 +17,7 @@ from repro.configs import reduced_config
 from repro.core.qconfig import QMCConfig
 from repro.core.serving_quant import quantize_for_serving
 from repro.models.model import init_params
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
 
 cfg = reduced_config("qwen2.5-1.5b")
 params = init_params(cfg, jax.random.PRNGKey(0))
@@ -34,12 +36,15 @@ requests = [Request(uid=i,
                     max_new_tokens=12)
             for i in range(6)]
 
-for name, p in (("fp32 weights", params), ("QMC weights", qparams)):
+for name, p, engine_cls in (
+        ("fp32 legacy", params, LegacyServeEngine),
+        ("fp32 paged", params, ServeEngine),
+        ("QMC paged", qparams, ServeEngine)):
     reqs = [Request(uid=r.uid, prompt=r.prompt,
                     max_new_tokens=r.max_new_tokens) for r in requests]
-    eng = ServeEngine(cfg, p, slots=3, max_len=32)
+    eng = engine_cls(cfg, p, slots=3, max_len=32)
     eng.run(reqs)
     s = eng.stats
-    print(f"{name:14s}: {s.tokens_out} tokens, {s.prefills} prefills, "
-          f"{s.decode_steps} decode steps, {s.tokens_per_s:.1f} tok/s")
+    print(f"{name:12s}: {s.tokens_out} tokens, {s.prefills} prefills, "
+          f"{s.decode_steps} decode calls, {s.tokens_per_s:.1f} tok/s")
     print(f"   first output: {reqs[0].out_tokens}")

@@ -121,8 +121,18 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
                                "compile_s": time.monotonic() - t0}
 
 
+def cost_dict(compiled) -> Dict:
+    """compiled.cost_analysis() across jax versions: newer returns a flat
+
+    dict, older a one-element list of dicts."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _cost_and_coll(compiled) -> Dict:
-    cost = dict(compiled.cost_analysis() or {})
+    cost = cost_dict(compiled)
     coll = rl.collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -191,7 +201,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
             serve_weights=serve_weights)
         rec["compile_s"] = extra["compile_s"]
         rec["lower_s"] = time.monotonic() - t0 - extra["compile_s"]
-        cost = dict(compiled.cost_analysis() or {})
+        cost = cost_dict(compiled)
         rec["cost"] = {k: float(v) for k, v in cost.items()
                        if isinstance(v, (int, float)) and k in
                        ("flops", "bytes accessed", "utilization",

@@ -171,8 +171,16 @@ def _path_str(path) -> str:
 # ---------------------------------------------------------------------------
 # activations / batches / caches
 # ---------------------------------------------------------------------------
-def batch_spec(mesh, global_batch: int) -> P:
+def _dp_entry(mesh):
+    """dp axes as a PartitionSpec entry: scalar for a single axis (the
+
+    canonical spelling), tuple only for a genuine multi-axis dp submesh."""
     dp = meshlib.dp_axes(mesh)
+    return dp[0] if len(dp) == 1 else dp
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    dp = _dp_entry(mesh)
     if global_batch % meshlib.dp_size(mesh) == 0 and dp:
         return P(dp)
     return P()
@@ -189,7 +197,7 @@ def cache_spec(path: str, leaf, mesh, global_batch: int) -> P:
     data (sequence-parallel cache for long-context batch=1); kv heads on
     model when divisible.
     """
-    dp = meshlib.dp_axes(mesh)
+    dp = _dp_entry(mesh)
     dp_n = meshlib.dp_size(mesh)
     tp_n = meshlib.axis_size(mesh, "model")
     batch_ok = dp and global_batch % dp_n == 0
@@ -235,7 +243,7 @@ def shard_cache_tree(cache, mesh, global_batch: int):
 
 
 def logits_spec(mesh, global_batch: int) -> P:
-    dp = meshlib.dp_axes(mesh)
+    dp = _dp_entry(mesh)
     if dp and global_batch % meshlib.dp_size(mesh) == 0:
         return P(dp, None, "model" if "model" in mesh.axis_names else None)
     return P(None, None, "model" if "model" in mesh.axis_names else None)

@@ -38,6 +38,15 @@ class Traffic:
         return self.weight_cells_inlier + self.weight_cells_outlier
 
 
+def pages_for(n_tokens: int, page: int) -> int:
+    """Pages needed to hold n_tokens (ceil division, min 1).
+
+    Canonical page-granularity rule, shared by the serving allocator
+    (``serve/paged_kv.py``) and this traffic model so the two accounts
+    cannot drift."""
+    return max(1, -(-int(n_tokens) // page))
+
+
 def kv_bits_per_step(cfg: ModelConfig, seq_len: int, kv_dtype_bits: int = 16
                      ) -> float:
     """KV cache + SSM state bits read per decode step (batch=1)."""
@@ -55,6 +64,68 @@ def kv_bits_per_step(cfg: ModelConfig, seq_len: int, kv_dtype_bits: int = 16
 
 def act_bits_per_step(cfg: ModelConfig, act_dtype_bits: int = 16) -> float:
     return 4.0 * cfg.n_layers * cfg.d_model * act_dtype_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVTraffic:
+    """Batch-dependent KV stream under the paged serving pool.
+
+    A block-table-aware attention kernel streams *whole live pages*, so
+    per-step traffic is page-rounded; residency counts allocated pages, so
+    pool sizing sees internal fragmentation explicitly. ``exact`` fields
+    are the contiguous (unpadded) equivalents for comparison. (The CPU
+    reference gather in ``models/attention.py`` reads the full block-table
+    width instead — this model describes the target hardware path.)"""
+    page: int
+    n_seqs: int
+    n_pages: int                     # allocated across the batch
+    kv_bits_per_step: float          # page-rounded, summed over the batch
+    kv_bits_per_step_exact: float    # contiguous equivalent
+    resident_bits: float             # pool bytes held by the batch
+    resident_bits_exact: float
+
+    @property
+    def frag_bits_per_step(self) -> float:
+        return self.kv_bits_per_step - self.kv_bits_per_step_exact
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of allocated pool bits holding live tokens."""
+        return (self.resident_bits_exact / self.resident_bits
+                if self.resident_bits else 1.0)
+
+    def apply(self, traffic: "Traffic") -> "Traffic":
+        """Rebind a single-sequence Traffic to this batch's KV stream —
+
+        the hook that lets the §4 DSE (Eq. 3 latency / Eq. 4 power) score a
+        memory system under batched paged serving instead of the paper's
+        batch-1 assumption."""
+        return dataclasses.replace(
+            traffic, name=f"{traffic.name}+paged_b{self.n_seqs}",
+            kv_bits=self.kv_bits_per_step)
+
+
+def kv_traffic_paged(cfg: ModelConfig, seq_lens, *, page: int = 16,
+                     kv_dtype_bits: int = 16) -> PagedKVTraffic:
+    """KV traffic/residency for a batch of sequences in the paged pool.
+
+    ``seq_lens`` are the current lengths (prompt + generated so far) of the
+    active sequences; each contributes ceil(len/page) pages. SSM state (the
+    O(1) part of ``kv_bits_per_step``) is per-slot dense and not paged."""
+    seq_lens = list(seq_lens)
+    n_pages = 0
+    bits = bits_exact = 0.0
+    for length in seq_lens:
+        p = pages_for(length, page)
+        n_pages += p
+        bits += kv_bits_per_step(cfg, p * page, kv_dtype_bits)
+        bits_exact += kv_bits_per_step(cfg, int(length), kv_dtype_bits)
+    # residency: decode streams the whole live cache each step, so one
+    # step's stream IS the resident KV at these lengths
+    return PagedKVTraffic(page=page, n_seqs=len(seq_lens),
+                          n_pages=n_pages, kv_bits_per_step=bits,
+                          kv_bits_per_step_exact=bits_exact,
+                          resident_bits=bits, resident_bits_exact=bits_exact)
 
 
 def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,

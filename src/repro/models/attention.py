@@ -156,6 +156,12 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
                 tap("wo", out.reshape(b, s, nh * hd))
             return linear(out.reshape(b, s, nh * hd), p["wo"],
                           p.get("bo"), use_pallas, tp_dim=0), None
+    elif "k_pages" in cache:                               # paged decode
+        new_cache = paged_cache_write(cache, k, v, positions[:, -1])
+        k_all, v_all = paged_cache_read(new_cache, x.dtype, nkv, hd)
+        t_max = k_all.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(t_max)[None, :], (b, t_max))
+        valid = (positions[:, -1] + 1)
     else:
         t_max = cache["k"].shape[1]
         pos0 = 0 if s > 1 else (pos if pos is not None
@@ -183,15 +189,11 @@ def _cache_write(cache: dict, k: jax.Array, v: jax.Array, pos0) -> dict:
     quantizes to int8 when the cache is int8."""
     b, s, n_kv, hd = k.shape
     if "k_scale" in cache:
-        def q8(x):
-            scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) \
-                / 127.0 + 1e-8
-            codes = jnp.clip(jnp.round(x.astype(jnp.float32)
-                                       / scale[..., None]), -127, 127)
-            return (codes.astype(jnp.int8).reshape(b, s, n_kv * hd),
-                    scale.astype(jnp.bfloat16))
-        kq, ks = q8(k)
-        vq, vs = q8(v)
+        from repro.models.kvcache import quantize_kv
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        kq = kq.reshape(b, s, n_kv * hd)
+        vq = vq.reshape(b, s, n_kv * hd)
         return {
             "k": jax.lax.dynamic_update_slice(cache["k"], kq,
                                               (0, pos0, 0)),
@@ -219,6 +221,64 @@ def _cache_read(cache: dict, dtype, n_kv: int, hd: int):
     if "k_scale" in cache:
         k = k.astype(dtype) * cache["k_scale"][..., None].astype(dtype)
         v = v.astype(dtype) * cache["v_scale"][..., None].astype(dtype)
+    return k, v
+
+
+def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
+                      pos: jax.Array) -> dict:
+    """Scatter one decode token per sequence into the paged arena.
+
+    cache holds ``k_pages/v_pages [n_pages, page, kv_dim]`` plus
+    ``block_tbl [B, max_pages]``; ``pos [B]`` is each sequence's absolute
+    write position. Inactive lanes carry an all-null block table and land on
+    the reserved null page 0, which no live table maps."""
+    b, s, n_kv, hd = k.shape            # s == 1 (decode only)
+    page = cache["k_pages"].shape[1]
+    tbl = cache["block_tbl"]
+    blk = jnp.clip(pos // page, 0, tbl.shape[1] - 1)
+    page_idx = jnp.take_along_axis(tbl, blk[:, None], axis=1)[:, 0]  # [B]
+    off = pos % page
+    new = dict(cache)
+    if "k_scale_pages" in cache:
+        from repro.models.kvcache import quantize_kv
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
+            kq.reshape(b, n_kv * hd))
+        new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
+            vq.reshape(b, n_kv * hd))
+        new["k_scale_pages"] = cache["k_scale_pages"].at[page_idx, off].set(
+            ks.reshape(b, n_kv))
+        new["v_scale_pages"] = cache["v_scale_pages"].at[page_idx, off].set(
+            vs.reshape(b, n_kv))
+        return new
+    dt = cache["k_pages"].dtype
+    new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
+        k.astype(dt).reshape(b, n_kv * hd))
+    new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
+        v.astype(dt).reshape(b, n_kv * hd))
+    return new
+
+
+def paged_cache_read(cache: dict, dtype, n_kv: int, hd: int):
+    """Gather each sequence's pages into logical token order.
+
+    Returns k, v of shape ``[B, max_pages*page, n_kv, hd]``; entries past
+    the sequence's valid length are garbage and masked by ``kv_valid_len``
+    in ``attend``. Note this XLA reference gather materializes the FULL
+    block-table width (null-page repeats included); a page-table-aware
+    kernel streams only the live pages, which is the page-rounded traffic
+    ``memsys.workload.kv_traffic_paged`` charges the DSE."""
+    tbl = cache["block_tbl"]                              # [B, P]
+    b, p = tbl.shape
+    page = cache["k_pages"].shape[1]
+    k = cache["k_pages"][tbl].reshape(b, p * page, n_kv, hd)
+    v = cache["v_pages"][tbl].reshape(b, p * page, n_kv, hd)
+    if "k_scale_pages" in cache:
+        ks = cache["k_scale_pages"][tbl].reshape(b, p * page, n_kv)
+        vs = cache["v_scale_pages"][tbl].reshape(b, p * page, n_kv)
+        k = k.astype(dtype) * ks[..., None].astype(dtype)
+        v = v.astype(dtype) * vs[..., None].astype(dtype)
     return k, v
 
 

@@ -116,6 +116,7 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                 positions: jax.Array,
                 cache: Optional[dict] = None,
                 pos: Optional[jax.Array] = None,
+                valid_len: Optional[jax.Array] = None,
                 tap=None, use_pallas: bool = False
                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (x_out, new_cache, moe_aux_loss)."""
@@ -135,6 +136,7 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
     elif kind == "mamba":
         mix, mc = mamba_block(p["mamba"], h, cfg,
                               cache=cache.get("mamba") if cache else None,
+                              valid_len=valid_len,
                               tap=_sub(tap, "mamba"), use_pallas=use_pallas)
         if mc is not None:
             new_cache["mamba"] = mc
@@ -146,6 +148,7 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                                use_pallas=use_pallas)
         mix_m, mc = mamba_block(p["mamba"], h, cfg,
                                 cache=cache.get("mamba") if cache else None,
+                                valid_len=valid_len,
                                 tap=_sub(tap, "mamba"),
                                 use_pallas=use_pallas)
         mix = 0.5 * (mix_a + mix_m)

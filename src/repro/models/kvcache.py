@@ -1,4 +1,21 @@
-"""KV / SSM cache construction for every block kind (stacked over groups)."""
+"""KV / SSM cache construction for every block kind (stacked over groups).
+
+Two attention-cache layouts share one quantization scheme:
+
+  * contiguous ``[B, T, kv_dim]`` — one slab per sequence, used by training,
+    prefill, and the legacy per-slot decode path.
+  * paged ``[n_pages, page, kv_dim]`` — a shared arena of fixed-size pages
+    addressed through per-sequence block tables (``serve/paged_kv.py``).
+    The page is the unit of both allocation and DRAM streaming: with the
+    default 16-token page and an int8 cache, one page per KV head group is a
+    multiple of the 64-byte LPDDR5 burst the memsys model charges per access
+    (``memsys/devices.py``), so the paged gather never pays for a partial
+    burst.
+
+``quantize_kv`` is the single int8 code path — both layouts store identical
+codes/scales, which is what makes paged-vs-contiguous decode token-identical
+under ``kv_cache_quant``.
+"""
 from __future__ import annotations
 
 import jax
@@ -22,6 +39,68 @@ def _attn_cache(cfg, batch: int, max_len: int, dtype):
                                      jnp.bfloat16)}
     return {"k": jnp.zeros((batch, max_len, kvd), dtype),
             "v": jnp.zeros((batch, max_len, kvd), dtype)}
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(token, head) symmetric int8: x [..., n_kv, hd] ->
+
+    (codes int8 [..., n_kv, hd], scale bf16 [..., n_kv]). Shared by the
+    contiguous and paged write paths so both layouts hold identical bits."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                     -127, 127)
+    return codes.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def paged_attn_cache(cfg, n_pages: int, page: int, max_slots: int,
+                     max_pages_per_seq: int, dtype):
+    """Paged K/V arena + block table (one group's share of the pool).
+
+    Arena leaves are ``[n_pages, page, kv_dim]`` (pages are shared across
+    layers only in *index space* — every group owns its own arena rows, but
+    page id j means tokens [j*page, (j+1)*page) of the owning sequence in
+    every group, so one block table serves the whole stack, vLLM-style).
+    Page 0 is reserved as the null page: inactive decode lanes scatter their
+    garbage K/V there and it is never mapped into a live block table."""
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    c = {"block_tbl": jnp.zeros((max_slots, max_pages_per_seq), jnp.int32)}
+    if getattr(cfg, "kv_cache_quant", False):
+        c.update({
+            "k_pages": jnp.zeros((n_pages, page, kvd), jnp.int8),
+            "v_pages": jnp.zeros((n_pages, page, kvd), jnp.int8),
+            "k_scale_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads),
+                                       jnp.bfloat16),
+            "v_scale_pages": jnp.zeros((n_pages, page, cfg.n_kv_heads),
+                                       jnp.bfloat16)})
+        return c
+    c.update({"k_pages": jnp.zeros((n_pages, page, kvd), dtype),
+              "v_pages": jnp.zeros((n_pages, page, kvd), dtype)})
+    return c
+
+
+def paged_block_cache(cfg, kind: str, n_pages: int, page: int,
+                      max_slots: int, max_pages_per_seq: int, dtype):
+    """Like block_cache, but attention K/V live in the paged arena; SSM /
+
+    conv state stays dense per-slot (it is O(1) in sequence length)."""
+    c = {}
+    if kind.startswith("attn") or kind.startswith("hybrid"):
+        c["attn"] = paged_attn_cache(cfg, n_pages, page, max_slots,
+                                     max_pages_per_seq, dtype)
+    if kind == "mamba" or kind.startswith("hybrid"):
+        c["mamba"] = _mamba_cache(cfg, max_slots, dtype)
+    return c
+
+
+def paged_init_cache(cfg, n_pages: int, page: int, max_slots: int,
+                     max_pages_per_seq: int, dtype=jnp.bfloat16):
+    """Stacked paged-pool pytree: leaves have leading n_groups dim."""
+    group = {f"b{i}": paged_block_cache(cfg, kind, n_pages, page, max_slots,
+                                        max_pages_per_seq, dtype)
+             for i, kind in enumerate(cfg.pattern)}
+    return jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.n_groups,) + l.shape),
+        group)
 
 
 def _mamba_cache(cfg, batch: int, dtype):

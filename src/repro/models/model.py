@@ -82,7 +82,7 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 # group application (one scan step)
 # --------------------------------------------------------------------------
 def _apply_group(cfg: ModelConfig, grp_params, x, grp_cache, positions, pos,
-                 xattn_params=None, enc_kv=None, tap=None,
+                 xattn_params=None, enc_kv=None, valid_len=None, tap=None,
                  use_pallas: bool = False):
     aux_total = jnp.zeros((), jnp.float32)
     new_cache = {}
@@ -112,7 +112,7 @@ def _apply_group(cfg: ModelConfig, grp_params, x, grp_cache, positions, pos,
         else:
             x, nc, aux = B.apply_block(
                 bp, x, kind, cfg.moe_slots[i], cfg, positions=positions,
-                cache=bc, pos=pos,
+                cache=bc, pos=pos, valid_len=valid_len,
                 tap=_tap_prefix(tap, f"b{i}"), use_pallas=use_pallas)
             new_cache[f"b{i}"] = nc
             aux_total = aux_total + aux
@@ -177,6 +177,7 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
             vis_embeds: Optional[jax.Array] = None,
             frames: Optional[jax.Array] = None,
             enc_out: Optional[jax.Array] = None,
+            valid_len: Optional[jax.Array] = None,
             taps: Optional[dict] = None,
             use_pallas: bool = False, scan_layers: bool = True,
             remat: bool = False, skip_head: bool = False
@@ -184,7 +185,10 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
     """Returns (logits [B,S_text,V], new_cache, moe_aux).
 
     skip_head=True returns the final-norm hidden states instead of logits
-    (the chunked-CE loss fuses the lm_head into the loss)."""
+    (the chunked-CE loss fuses the lm_head into the loss).
+    valid_len [B]: true lengths when tokens are right-padded to a prefill
+    bucket — attention is causally immune to right padding, but the SSM
+    recurrence needs it to keep its carried state clean."""
     b, s = tokens.shape
     x = embed_tokens(tokens, params["embed"]["tok"], cfg.scale_embed)
 
@@ -211,7 +215,8 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
             # per-layer cross KV, stacked: computed functionally inside scan
             pass
 
-    grp = functools.partial(_apply_group, cfg, use_pallas=use_pallas)
+    grp = functools.partial(_apply_group, cfg, valid_len=valid_len,
+                            use_pallas=use_pallas)
     if remat:
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if cfg.remat_policy == "dots" else None)
@@ -267,7 +272,7 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
                 lc = (jax.tree_util.tree_map(lambda l: l[i], cache)
                       if cache is not None else None)
                 x, nc, a = _apply_group(
-                    cfg, lp, x, lc, positions, pos,
+                    cfg, lp, x, lc, positions, pos, valid_len=valid_len,
                     tap=_make_tap(taps, i), use_pallas=use_pallas)
                 aux_total = aux_total + a
                 ncs.append(nc)

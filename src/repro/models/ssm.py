@@ -78,9 +78,16 @@ def ssd_chunked(x: jax.Array, a_dt: jax.Array, b_mat: jax.Array,
     return y, h_final
 
 
-def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array]
+def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array],
+                 valid_len: Optional[jax.Array] = None
                  ) -> Tuple[jax.Array, Optional[jax.Array]]:
-    """Depthwise causal conv1d. x [B,L,C]; w [C,K]; cache [B,K-1,C]."""
+    """Depthwise causal conv1d. x [B,L,C]; w [C,K]; cache [B,K-1,C].
+
+    ``valid_len [B]`` marks the true sequence end inside a right-padded
+    prefill bucket: the returned cache then holds the K-1 inputs *ending at
+    the last valid token* (input index t sits at xin row t + K-1, so rows
+    valid_len..valid_len+K-2 are exactly x[valid_len-K+1 : valid_len], with
+    the pre-sequence zeros appearing naturally when valid_len < K-1)."""
     bsz, l, ch = x.shape
     k = w.shape[1]
     if cache is None:
@@ -88,7 +95,11 @@ def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array]
         new_cache = None
     else:
         xin = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
-        new_cache = xin[:, -(k - 1):, :]
+        if valid_len is None:
+            new_cache = xin[:, -(k - 1):, :]
+        else:
+            idx = valid_len[:, None] + jnp.arange(k - 1)[None, :]
+            new_cache = jnp.take_along_axis(xin, idx[..., None], axis=1)
     out = jax.lax.conv_general_dilated(
         xin, w.T[:, None, :].astype(x.dtype),    # [K,1,C] kernel
         window_strides=(1,), padding="VALID",
@@ -99,9 +110,16 @@ def _causal_conv(x: jax.Array, w: jax.Array, cache: Optional[jax.Array]
 
 def mamba_block(p: dict, x: jax.Array, cfg, *,
                 cache: Optional[dict] = None,
+                valid_len: Optional[jax.Array] = None,
                 tap=None, use_pallas: bool = False
                 ) -> Tuple[jax.Array, Optional[dict]]:
-    """Mamba2 mixer. cache = {'ssm': [B,H,P,N], 'conv': [B,K-1,convdim]}."""
+    """Mamba2 mixer. cache = {'ssm': [B,H,P,N], 'conv': [B,K-1,convdim]}.
+
+    ``valid_len [B]``: true prompt lengths when prefilling a right-padded
+    bucket (paged serving). Unlike attention, the recurrence is not
+    causally immune to right padding, so pad positions get dt=0 / x=0 —
+    the same state-neutral values the internal chunk padding uses — and
+    the conv cache is gathered at the true sequence end."""
     bsz, s, _ = x.shape
     di, hd = cfg.d_inner, cfg.ssm_headdim
     nh, g, n = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.d_state
@@ -112,7 +130,8 @@ def mamba_block(p: dict, x: jax.Array, cfg, *,
     z, xbc, dt = jnp.split(zxbcdt, [di, di + cfg.conv_dim], axis=-1)
 
     conv_cache = cache.get("conv") if cache else None
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_cache)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_cache,
+                                 valid_len=valid_len if s > 1 else None)
     xbc = jax.nn.silu(xbc)
     xs, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
 
@@ -137,6 +156,10 @@ def mamba_block(p: dict, x: jax.Array, cfg, *,
         y = y[:, None].astype(x.dtype)                        # [B,1,H,P]
         h_final = h_new
     else:
+        if valid_len is not None:
+            vm = (jnp.arange(s)[None, :] < valid_len[:, None])    # [B,S]
+            dt = dt * vm[..., None]
+            xh = xh * vm[:, :, None, None].astype(xh.dtype)
         chunk = CHUNK if s >= CHUNK else max(8, 1 << (s - 1).bit_length())
         pad = (-s) % chunk
         if pad:

@@ -1,1 +1,14 @@
-"""serve subsystem."""
+"""serve subsystem: paged KV pool + continuous-batching engines.
+
+Public surface:
+  * ``engine.ServeEngine``        — paged, batched-decode engine (default)
+  * ``engine.LegacyServeEngine``  — per-slot baseline
+  * ``engine.Request`` / ``engine.EngineStats``
+  * ``paged_kv.PagedKVPool``      — block-table page allocator
+  * ``scheduler.FifoScheduler``   — admission + preemption policy
+"""
+from repro.serve.engine import (EngineStats, LegacyServeEngine,  # noqa: F401
+                                Request, ServeEngine)
+from repro.serve.paged_kv import PagedKVPool, PoolExhausted  # noqa: F401
+from repro.serve.scheduler import (FifoScheduler,  # noqa: F401
+                                   SchedulerConfig, bucket_len)

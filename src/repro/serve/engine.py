@@ -1,19 +1,28 @@
-"""Batched serving engine: request queue -> prefill -> interleaved decode.
+"""Serving engines: paged continuous batching (default) + legacy per-slot.
 
-Continuous-batching-lite: requests are grouped into fixed-size slots; a slot
-becomes free when its sequence emits EOS or hits max_new_tokens, and the
-next queued request is prefilled into it. Weights may be dense bf16 or the
-QMC serving format (ShardedQTensor / QTensor stacks) — the engine is
-agnostic; matmul dispatch handles it.
+``ServeEngine`` is the paged engine: all active slots decode in ONE
+``jax.jit`` step against a shared paged KV arena (``serve/paged_kv.py``),
+with FIFO admission, power-of-2 prefill bucketing and recompute-style
+preemption (``serve/scheduler.py``). Weights may be dense fp or the QMC
+serving format (ShardedQTensor / QTensor stacks) — matmul dispatch handles
+either, so the paper's eMEM-resident weights and the LPDDR5-resident paged
+KV stream meet in the same step function.
 
-Single-process implementation (CPU container); the pjit'd steps are the
-same ones the multi-pod dry-run lowers for the 256/512-chip meshes.
+``LegacyServeEngine`` keeps the original loop — N sequential batch-1 decode
+calls over per-slot contiguous caches — as the parity/throughput baseline
+for ``benchmarks/serving.py``.
+
+Under greedy decoding both engines are token-identical: the paged gather
+reads the same K/V values the contiguous slab holds (int8 caches share one
+quantizer, ``models.kvcache.quantize_kv``), and masked pages contribute
+exp(-1e30) = 0 to the softmax.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +30,10 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill
+from repro.serve.paged_kv import (PagedKVPool, PoolExhausted, make_adopt,
+                                  make_bucketed_prefill, pages_for)
+from repro.serve.scheduler import (FifoScheduler, SchedulerConfig,
+                                   bucket_len)
 
 
 @dataclasses.dataclass
@@ -36,16 +49,231 @@ class Request:
 @dataclasses.dataclass
 class EngineStats:
     prefills: int = 0
-    decode_steps: int = 0
+    decode_steps: int = 0            # jit decode calls (batched = 1/step)
     tokens_out: int = 0
     wall_s: float = 0.0
+    preemptions: int = 0
+    pages_peak: int = 0
+    tokens_discarded: int = 0        # emitted then erased by preemption
+    # per decode call: wall seconds and tokens emitted by that call (the
+    # emitted count includes tokens a later preemption discards — the jit
+    # work was really done; tokens_discarded records how many)
+    step_seconds: List[float] = dataclasses.field(default_factory=list)
+    step_tokens: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
 
+    def per_token_latencies(self) -> List[float]:
+        return [s / t for s, t in zip(self.step_seconds, self.step_tokens)
+                if t]
 
+
+@functools.lru_cache(maxsize=None)
+def _decode_jit(cfg: ModelConfig):
+    """One jitted decode per ModelConfig (hashable frozen dataclass):
+
+    engines sharing a config reuse XLA executables instead of re-tracing."""
+    return jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
+
+
+def _finished(req: Request, pos: int, max_len: int) -> bool:
+    """Termination test shared by both engines (applied after each emit):
+
+    budget spent, EOS emitted (including at prefill), or the next decode
+    would write past the cache capacity (positions 0..max_len-1 are
+    writable, so the cache is full once pos == max_len)."""
+    return (len(req.out_tokens) >= req.max_new_tokens
+            or (req.eos_id is not None and req.out_tokens
+                and req.out_tokens[-1] == req.eos_id)
+            or pos >= max_len)
+
+
+# ==========================================================================
+# paged continuous-batching engine (default)
+# ==========================================================================
 class ServeEngine:
+    """Continuous batching over a paged KV pool.
+
+    ``slots`` bounds concurrent sequences; ``max_len`` is each sequence's
+    logical capacity (prompt + generated). ``n_pages`` sizes the shared
+    pool — the default fits every slot at full length, so preemption only
+    occurs when the caller shrinks it (memory-pressure experiments).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
+                 max_len: int = 256, cache_dtype=jnp.float32,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 max_prefill_tokens: Optional[int] = None):
+        if cfg.is_encdec or cfg.n_vis_tokens:
+            raise NotImplementedError(
+                "paged engine covers decoder-only models; use "
+                "LegacyServeEngine for encdec/vlm")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache_dtype = cache_dtype
+        self.page = page_size
+        self.max_pages_per_seq = pages_for(max_len, page_size)
+        self.n_pages = n_pages or slots * self.max_pages_per_seq
+        self.max_prefill_tokens = (max_prefill_tokens
+                                   or max(512, bucket_len(max_len,
+                                                          page_size)))
+        self.stats = EngineStats()
+        self._decode = _decode_jit(cfg)
+        self._prefill = make_bucketed_prefill(cfg, cache_dtype)
+        self._adopt = make_adopt(cfg, page_size)
+
+    def run(self, requests: List[Request],
+            greedy: bool = True) -> List[Request]:
+        """Process all requests to completion; returns them with outputs.
+
+        Stats describe this run only (a fresh EngineStats per call)."""
+        if not greedy:
+            raise NotImplementedError("only greedy decoding is implemented")
+        self.stats = EngineStats()
+        t0 = time.monotonic()
+        for r in requests:
+            if len(r.prompt) > self.max_len:
+                raise ValueError(f"request {r.uid}: prompt length "
+                                 f"{len(r.prompt)} > max_len={self.max_len}")
+        pool = PagedKVPool(self.cfg, n_pages=self.n_pages, page=self.page,
+                           max_slots=self.slots,
+                           max_pages_per_seq=self.max_pages_per_seq,
+                           cache_dtype=self.cache_dtype)
+        sched = FifoScheduler(SchedulerConfig(
+            page=self.page, max_prefill_tokens=self.max_prefill_tokens,
+            max_len=self.max_len))
+        for r in requests:
+            sched.enqueue(r)
+
+        arena = pool.init_arena()
+        active: List[Optional[Request]] = [None] * self.slots
+        pos = np.zeros(self.slots, np.int64)
+        next_tok = np.zeros(self.slots, np.int64)
+
+        def finish(s: int) -> None:
+            active[s].done = True
+            active[s] = None
+            pool.free_slot(s)
+            sched.on_finish(s)
+
+        def preempt(victim: int) -> None:
+            req = active[victim]
+            # recompute-style eviction: drop generated state, requeue; the
+            # emitted tokens are regenerated, so back them out of the stats
+            self.stats.tokens_out -= len(req.out_tokens)
+            self.stats.tokens_discarded += len(req.out_tokens)
+            req.out_tokens = []
+            active[victim] = None
+            pool.free_slot(victim)
+            sched.on_preempt(victim)
+            sched.requeue_front(req)
+
+        def admit() -> None:
+            nonlocal arena
+            sched.start_round()
+            free_slots = [s for s in range(self.slots)
+                          if active[s] is None]
+            while free_slots:
+                req = sched.next_admission(pool.free_count)
+                if req is None:
+                    break
+                L = len(req.prompt)
+                bucket = bucket_len(L, self.page)
+                toks = np.zeros((1, bucket), np.int32)
+                toks[0, :L] = req.prompt
+                logits, contig = self._prefill(
+                    self.params, jnp.asarray(toks),
+                    jnp.asarray([L], jnp.int32))
+                self.stats.prefills += 1
+                tok = int(jnp.argmax(logits[0, L - 1]))
+                req.out_tokens.append(tok)
+                self.stats.tokens_out += 1
+                if _finished(req, L, self.max_len):
+                    req.done = True     # e.g. prefill emitted EOS: no slot
+                    continue
+                s = free_slots.pop(0)
+                pool.ensure(s, L)       # cannot fail: admission checked
+                ids = list(pool.slot_pages[s])
+                ids += [0] * (bucket // self.page - len(ids))
+                arena = self._adopt(arena, contig,
+                                    jnp.asarray(ids, jnp.int32), s)
+                active[s] = req
+                pos[s] = L
+                next_tok[s] = tok
+                sched.on_admit(s)
+
+        admit()
+        while any(a is not None for a in active) or sched.pending:
+            if not any(a is not None for a in active):
+                if sched.pending:
+                    raise PoolExhausted(
+                        f"queue head needs more than the whole pool "
+                        f"({self.n_pages} pages)")
+                break
+            # every active slot must own the page its next token writes to;
+            # on exhaustion evict the youngest younger slot — or self, if
+            # none is younger (oldest-first order makes progress certain)
+            order = sorted((s for s in range(self.slots)
+                            if active[s] is not None),
+                           key=lambda s: sched.admitted_at[s])
+            for s in order:
+                while (active[s] is not None
+                       and pool.ensure(s, int(pos[s]) + 1) is None):
+                    victim = sched.choose_victim(s)
+                    if victim is not None:
+                        preempt(victim)
+                        continue
+                    if not any(active[t] is not None
+                               for t in range(self.slots) if t != s):
+                        raise PoolExhausted(
+                            f"sequence in slot {s} needs "
+                            f"{int(pos[s]) + 1} tokens of KV but the pool "
+                            f"holds {self.n_pages} pages total")
+                    preempt(s)      # yield to older slots; retry later
+
+            ts = time.monotonic()
+            cache_in = pool.install_tables(arena)
+            toks = jnp.asarray(next_tok[:, None].astype(np.int32))
+            posv = jnp.asarray(pos.astype(np.int32))
+            logits, arena = self._decode(self.params, toks, cache_in, posv)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            self.stats.decode_steps += 1
+
+            emitted = 0
+            for s in range(self.slots):
+                req = active[s]
+                if req is None:
+                    continue
+                pos[s] += 1
+                tok = int(nxt[s])
+                next_tok[s] = tok
+                req.out_tokens.append(tok)
+                self.stats.tokens_out += 1
+                emitted += 1
+                if _finished(req, int(pos[s]), self.max_len):
+                    finish(s)
+            self.stats.step_seconds.append(time.monotonic() - ts)
+            self.stats.step_tokens.append(emitted)
+            admit()
+
+        self.stats.preemptions = sched.preemptions
+        self.stats.pages_peak = max(self.stats.pages_peak, pool.pages_peak)
+        self.stats.wall_s = time.monotonic() - t0
+        return requests
+
+
+# ==========================================================================
+# legacy per-slot engine (baseline)
+# ==========================================================================
+class LegacyServeEngine:
+    """Original continuous-batching-lite loop: per-slot batch-1 contiguous
+
+    caches, one sequential jit decode call per active slot per token."""
+
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32):
         self.cfg = cfg
@@ -54,8 +282,7 @@ class ServeEngine:
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.stats = EngineStats()
-        self._decode = jax.jit(
-            lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
+        self._decode = _decode_jit(cfg)
 
     def _prefill_one(self, prompt: np.ndarray):
         tokens = jnp.asarray(prompt)[None, :]
@@ -67,7 +294,12 @@ class ServeEngine:
 
     def run(self, requests: List[Request],
             greedy: bool = True) -> List[Request]:
-        """Process all requests to completion; returns them with outputs."""
+        """Process all requests to completion; returns them with outputs.
+
+        Stats describe this run only (a fresh EngineStats per call)."""
+        if not greedy:
+            raise NotImplementedError("only greedy decoding is implemented")
+        self.stats = EngineStats()
         t0 = time.monotonic()
         queue = list(requests)
         # slot state: per-slot cache (batch dim 1) + active request
@@ -78,15 +310,18 @@ class ServeEngine:
 
         def refill():
             for s in range(self.slots):
-                if active[s] is None and queue:
+                while active[s] is None and queue:
                     req = queue.pop(0)
                     tok, cache = self._prefill_one(req.prompt)
+                    req.out_tokens.append(tok)
+                    self.stats.tokens_out += 1
+                    if _finished(req, len(req.prompt), self.max_len):
+                        req.done = True   # EOS at prefill: no decode slot
+                        continue
                     active[s] = req
                     caches[s] = cache
                     positions[s] = len(req.prompt)
                     next_tok[s] = tok
-                    req.out_tokens.append(tok)
-                    self.stats.tokens_out += 1
 
         refill()
         while any(a is not None for a in active):
@@ -94,14 +329,7 @@ class ServeEngine:
                 req = active[s]
                 if req is None:
                     continue
-                if len(req.out_tokens) >= req.max_new_tokens or \
-                        (req.eos_id is not None
-                         and req.out_tokens[-1] == req.eos_id) or \
-                        positions[s] + 1 >= self.max_len:
-                    req.done = True
-                    active[s] = None
-                    caches[s] = None
-                    continue
+                ts = time.monotonic()
                 tok = jnp.asarray([[next_tok[s]]], jnp.int32)
                 logits, caches[s] = self._decode(
                     self.params, tok, caches[s],
@@ -112,6 +340,12 @@ class ServeEngine:
                 req.out_tokens.append(nxt)
                 self.stats.decode_steps += 1
                 self.stats.tokens_out += 1
+                self.stats.step_seconds.append(time.monotonic() - ts)
+                self.stats.step_tokens.append(1)
+                if _finished(req, positions[s], self.max_len):
+                    req.done = True
+                    active[s] = None
+                    caches[s] = None
             refill()
         self.stats.wall_s = time.monotonic() - t0
         return requests

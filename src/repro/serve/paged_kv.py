@@ -1,0 +1,220 @@
+"""Paged KV-cache pool: block-table paging over one shared device arena.
+
+The QMC deployment splits the memory system so LPDDR5 carries *only* the
+dynamic KV stream (weights live in eMEMs). This module is the serving-side
+half of that bargain: instead of one contiguous ``[1, max_len, kv_dim]``
+slab per decode slot, every sequence draws fixed-size pages from a single
+``[n_pages, page, kv_dim]`` arena (per layer group), addressed through a
+per-sequence block table. That gives
+
+  * O(page) internal fragmentation instead of O(max_len) over-allocation,
+  * free-list recycling the moment a sequence finishes, and
+  * a single batched decode step over all slots (the gather path in
+    ``models/attention.py``) rather than N sequential batch-1 calls.
+
+Page-size choice is a memory-system knob, not just a software one: a page
+is the granule the paged gather streams from DRAM, so it should be a
+multiple of the LPDDR5 burst (64 B bus transactions in
+``memsys/devices.py``). The default ``page=16`` tokens keeps every
+per-head page a whole number of bursts for both the fp and int8 cache
+layouts; ``memsys.workload.kv_traffic_paged`` charges this page-rounded
+traffic — the live pages a block-table-aware attention kernel streams.
+(The CPU reference gather in ``models/attention.py`` materializes the
+full table width instead; the traffic model describes the target
+hardware path, not that XLA fallback.)
+
+Host-side metadata (free list, block tables, per-slot lengths) lives here;
+the device arena itself is an ordinary cache pytree built by
+``models.kvcache.paged_init_cache`` and threaded through ``jax.jit`` by the
+engine. Page 0 is reserved as the null page for inactive decode lanes.
+"""
+from __future__ import annotations
+
+import functools
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.memsys.workload import pages_for  # noqa: F401  (canonical rule)
+from repro.models import kvcache as KV
+from repro.models.config import ModelConfig
+
+
+class PoolExhausted(Exception):
+    """Raised when an allocation cannot be satisfied even after preemption."""
+
+
+class PagedKVPool:
+    """Free-list page allocator + per-slot block tables.
+
+    Pure host-side bookkeeping: device state is the arena pytree the engine
+    owns. ``n_pages`` counts usable pages; one extra null page (id 0) is
+    always added to the arena.
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int, page: int,
+                 max_slots: int, max_pages_per_seq: int,
+                 cache_dtype=jnp.float32):
+        if page & (page - 1):
+            raise ValueError(f"page size must be a power of 2, got {page}")
+        self.cfg = cfg
+        self.page = page
+        self.n_pages = n_pages
+        self.max_slots = max_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        self.cache_dtype = cache_dtype
+        # page 0 = null page -> usable ids are 1..n_pages
+        self.free: deque = deque(range(1, n_pages + 1))
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
+        self.block_tables = np.zeros((max_slots, max_pages_per_seq),
+                                     np.int32)
+        self.pages_peak = 0
+        self._tbl_dirty = True
+        self._tbl_dev = None
+
+    # ---- allocation ----------------------------------------------------
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_count(self) -> int:
+        return self.n_pages - len(self.free)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return pages_for(n_tokens, self.page) <= len(self.free)
+
+    def ensure(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """Grow slot's allocation to cover n_tokens positions.
+
+        Returns the list of newly allocated page ids, or None if the free
+        list cannot satisfy the request (caller decides whom to preempt)."""
+        have = len(self.slot_pages[slot])
+        need = pages_for(n_tokens, self.page)
+        if need > self.max_pages_per_seq:
+            raise PoolExhausted(
+                f"sequence needs {need} pages > max_pages_per_seq="
+                f"{self.max_pages_per_seq}")
+        if need <= have:
+            return []
+        if need - have > len(self.free):
+            return None
+        fresh = [self.free.popleft() for _ in range(need - have)]
+        for j, pid in enumerate(fresh, start=have):
+            self.slot_pages[slot].append(pid)
+            self.block_tables[slot, j] = pid
+        self._tbl_dirty = True
+        self.pages_peak = max(self.pages_peak, self.used_count)
+        return fresh
+
+    def free_slot(self, slot: int) -> int:
+        """Recycle all of a slot's pages; returns how many were freed."""
+        pages = self.slot_pages[slot]
+        n = len(pages)
+        self.free.extend(pages)
+        self.slot_pages[slot] = []
+        self.block_tables[slot, :] = 0
+        self._tbl_dirty = True
+        return n
+
+    def device_tables(self, n_groups: int) -> jax.Array:
+        """Block tables as a device array broadcast over layer groups."""
+        if self._tbl_dirty or self._tbl_dev is None:
+            tbl = jnp.asarray(self.block_tables)
+            self._tbl_dev = jnp.broadcast_to(
+                tbl[None], (n_groups,) + tbl.shape)
+            self._tbl_dirty = False
+        return self._tbl_dev
+
+    # ---- device arena --------------------------------------------------
+    def init_arena(self):
+        """Fresh zeroed arena pytree (leading n_groups dim, +1 null page)."""
+        return KV.paged_init_cache(self.cfg, self.n_pages + 1, self.page,
+                                   self.max_slots, self.max_pages_per_seq,
+                                   self.cache_dtype)
+
+    def install_tables(self, arena):
+        """Return arena with current block tables written into every group."""
+        tbl = self.device_tables(self.cfg.n_groups)
+        out = {}
+        for key, grp in arena.items():
+            grp = dict(grp)
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                attn["block_tbl"] = tbl
+                grp["attn"] = attn
+            out[key] = grp
+        return out
+
+
+# -------------------------------------------------------------------------
+# prefill adoption: contiguous batch-1 cache -> arena pages
+# -------------------------------------------------------------------------
+_CONTIG_TO_PAGED = (("k", "k_pages"), ("v", "v_pages"),
+                    ("k_scale", "k_scale_pages"),
+                    ("v_scale", "v_scale_pages"))
+
+
+@functools.lru_cache(maxsize=None)
+def make_adopt(cfg: ModelConfig, page: int):
+    """jit'd (arena, contig_cache, page_ids, slot) -> arena.
+
+    Copies a batch-1 contiguous prefill cache (bucket length T, a multiple
+    of ``page``) into the arena pages listed in ``page_ids`` (length
+    T//page; trailing ids may repeat the null page 0 when the prompt needs
+    fewer pages than the bucket holds — null-page contents are never read).
+    SSM/conv state is dense per-slot and lands in row ``slot``. One compile
+    per prefill bucket length."""
+
+    @jax.jit
+    def adopt(arena, contig, page_ids, slot):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                src = contig[key]["attn"]
+                n = page_ids.shape[0]
+                for c_name, p_name in _CONTIG_TO_PAGED:
+                    if c_name not in src:
+                        continue
+                    s = src[c_name]                    # [G, 1, T, X]
+                    g, _, t, x = s.shape
+                    s = s.reshape(g, n, page, x)
+                    attn[p_name] = attn[p_name].at[:, page_ids].set(s)
+                grp["attn"] = attn
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                src = contig[key]["mamba"]
+                mm["ssm"] = mm["ssm"].at[:, slot].set(src["ssm"][:, 0])
+                mm["conv"] = mm["conv"].at[:, slot].set(src["conv"][:, 0])
+                grp["mamba"] = mm
+            out[key] = grp
+        return out
+
+    return adopt
+
+
+@functools.lru_cache(maxsize=None)
+def make_bucketed_prefill(cfg: ModelConfig, cache_dtype=jnp.float32):
+    """Returns prefill(params, tokens [1,T], valid_len [1]) ->
+
+    (full_logits [1,T,V], cache). Unlike ``models.model.prefill`` this
+    keeps the full logits so the caller can read the logit at the true
+    (pre-padding) last prompt token — right padding is causally invisible
+    to attention, and ``valid_len`` keeps the recurrent SSM state clean.
+    Compiles once per bucket T."""
+    from repro.models.model import forward
+
+    @jax.jit
+    def _prefill(params, tokens, valid_len):
+        cache = KV.init_cache(cfg, 1, tokens.shape[1], cache_dtype)
+        logits, new_cache, _ = forward(cfg, params, tokens, cache=cache,
+                                       valid_len=valid_len)
+        return logits, new_cache
+
+    return _prefill

@@ -1,0 +1,120 @@
+"""Admission scheduling for the paged continuous-batching engine.
+
+Policy (deliberately simple, the paper's edge target is one device):
+
+  * **FIFO admission** — queued requests enter decode slots in arrival
+    order; a request is admitted only when a slot is free AND the pool can
+    cover its prompt pages.
+  * **Token-budget prefill bucketing** — prompts are right-padded to
+    power-of-2 lengths (floored at one page) so the jit'd prefill compiles
+    for a bounded set of shapes, and each admission round prefills at most
+    ``max_prefill_tokens`` padded tokens so a burst of long prompts
+    cannot starve in-flight decodes (continuous batching's
+    prefill/decode interleave knob).
+  * **Preemption on pool exhaustion** — when a running sequence needs its
+    next page and the free list is empty, the *youngest* admitted slot is
+    evicted (recompute-style: its pages are freed and the request re-enters
+    the queue head to be prefilled again later). Youngest-first preserves
+    FIFO completion order and, under greedy decoding, restarting is
+    output-identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Optional
+
+from repro.serve.paged_kv import pages_for
+
+
+def bucket_len(n: int, page: int) -> int:
+    """Smallest power of two >= max(n, page).
+
+    ``page`` is itself a power of two, so every bucket is a whole number of
+    pages — the invariant the prefill-adopt copy relies on."""
+    b = page
+    while b < n:
+        b <<= 1
+    return b
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    page: int = 16
+    max_prefill_tokens: int = 512     # padded prefill tokens per round
+    max_len: int = 256                # per-sequence logical capacity
+
+
+class FifoScheduler:
+    """FIFO queue + per-round prefill token budget + preemption policy."""
+
+    def __init__(self, cfg: SchedulerConfig):
+        self.cfg = cfg
+        self.queue: Deque = deque()
+        self._admit_seq = 0           # monotonically increasing admit stamp
+        self.admitted_at: dict = {}   # slot -> admit stamp
+        self.preemptions = 0
+        self._round_budget = cfg.max_prefill_tokens
+        self._round_first = True
+
+    def enqueue(self, req) -> None:
+        self.queue.append(req)
+
+    def requeue_front(self, req) -> None:
+        """Preempted request goes back to the queue head (FIFO fairness)."""
+        self.queue.appendleft(req)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def start_round(self) -> None:
+        self._round_budget = self.cfg.max_prefill_tokens
+        self._round_first = True
+
+    def next_admission(self, free_pages: int) -> Optional[object]:
+        """Pop the queue head if this round's budget and the pool allow it.
+
+        Returns the request, or None (empty queue / budget spent / pool
+        cannot hold the prompt right now). The first admission of a round
+        ignores the token budget — the budget throttles prefill *bursts*,
+        it must never deadlock a long prompt."""
+        if not self.queue:
+            return None
+        req = self.queue[0]
+        padded = bucket_len(len(req.prompt), self.cfg.page)
+        if not self._round_first and padded > self._round_budget:
+            return None
+        if pages_for(len(req.prompt), self.cfg.page) > free_pages:
+            return None
+        self._round_budget -= padded
+        self._round_first = False
+        return self.queue.popleft()
+
+    def on_admit(self, slot: int) -> None:
+        self.admitted_at[slot] = self._admit_seq
+        self._admit_seq += 1
+
+    def on_finish(self, slot: int) -> None:
+        self.admitted_at.pop(slot, None)
+
+    def choose_victim(self, requester: int) -> Optional[int]:
+        """Youngest slot admitted strictly AFTER the requester (or None).
+
+        Only younger slots are evictable: letting a freshly restarted
+        (hence younger) sequence evict an older one livelocks — the two
+        ping-pong, erasing each other's progress forever. With this order
+        the oldest admitted slot is never preempted, so it always runs to
+        completion and frees its pages: global progress is guaranteed.
+        A requester with no younger victim preempts *itself* and waits."""
+        stamp_r = self.admitted_at[requester]
+        candidates = [(stamp, slot) for slot, stamp in
+                      self.admitted_at.items() if stamp > stamp_r]
+        if not candidates:
+            return None
+        _, slot = max(candidates)
+        return slot
+
+    def on_preempt(self, slot: int) -> None:
+        self.preemptions += 1
+        self.admitted_at.pop(slot, None)

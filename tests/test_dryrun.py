@@ -29,7 +29,7 @@ for arch in ["gemma2-2b", "dbrx-132b", "mamba2-370m"]:
         lowered, compiled, extra = dr.lower_cell(
             arch, suite.name, multi_pod=True, mesh=mesh, cfg=cfg,
             suite=suite)
-        cost = dict(compiled.cost_analysis() or {})
+        cost = dr.cost_dict(compiled)
         coll = rl.collective_bytes(compiled.as_text())
         out[f"{arch}/{suite.kind}"] = {
             "flops": float(cost.get("flops", 0)),

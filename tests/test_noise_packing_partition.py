@@ -1,9 +1,13 @@
 """Noise model, bit-packing, and partitioning tests."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import partition as part
 from repro.core.noise import ber_from_confusion, confusion_matrix, \

@@ -1,0 +1,233 @@
+"""Paged KV pool + continuous-batching engine: parity with the legacy
+
+per-slot engine (fp32 and int8 caches, attention and hybrid stacks), page
+recycling, scheduler preemption under pool exhaustion, termination edge
+cases, throughput, and the memsys paged-traffic hook."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
+from repro.serve.paged_kv import PagedKVPool, PoolExhausted, pages_for
+from repro.serve.scheduler import bucket_len
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=64)
+CFG = ModelConfig(name="t", family="dense", **BASE)
+CFG_INT8 = ModelConfig(name="t8", family="dense", kv_cache_quant=True,
+                       **BASE)
+CFG_HYBRID = ModelConfig(name="th", family="hybrid", pattern=("hybrid",),
+                         d_state=16, ssm_headdim=32, **BASE)
+
+
+def _params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _requests(cfg, n=8, max_new=6, seed=5, lo=4, hi=14):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab,
+                                        size=int(L)).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, L in enumerate(rng.integers(lo, hi, size=n))]
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+def _run_both(cfg, reqs, *, slots=4, max_len=32, **paged_kw):
+    params = _params(cfg)
+    legacy = _clone(reqs)
+    LegacyServeEngine(cfg, params, slots=slots, max_len=max_len).run(legacy)
+    paged = _clone(reqs)
+    eng = ServeEngine(cfg, params, slots=slots, max_len=max_len,
+                      page_size=8, **paged_kw)
+    eng.run(paged)
+    return legacy, paged, eng
+
+
+# -------------------------------------------------------------------------
+# decode parity: paged gather == contiguous slab, token for token
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg", [CFG, CFG_INT8, CFG_HYBRID],
+                         ids=["fp32", "int8kv", "hybrid"])
+def test_paged_matches_legacy(cfg):
+    legacy, paged, eng = _run_both(cfg, _requests(cfg))
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in paged]
+    assert all(r.done for r in paged)
+    assert eng.stats.tokens_out == sum(len(r.out_tokens) for r in paged)
+
+
+def test_paged_batched_not_sequential():
+    """8 requests on 8 slots must decode in ~max_new jit calls, not 8x."""
+    reqs = _requests(CFG, n=8, max_new=6)
+    _, paged, eng = _run_both(CFG, reqs, slots=8)
+    assert eng.stats.decode_steps <= 6     # one batched call per token step
+    assert all(len(r.out_tokens) == 6 for r in paged)
+
+
+# -------------------------------------------------------------------------
+# pool mechanics: free/reuse, preemption
+# -------------------------------------------------------------------------
+def test_pool_alloc_free_recycles_pages():
+    pool = PagedKVPool(CFG, n_pages=6, page=8, max_slots=2,
+                       max_pages_per_seq=3)
+    assert pool.free_count == 6
+    fresh = pool.ensure(0, 17)                 # 3 pages
+    assert len(fresh) == 3 and pool.free_count == 3
+    assert 0 not in fresh                      # null page never handed out
+    assert pool.ensure(0, 20) == []            # already covered
+    assert list(pool.block_tables[0][:3]) == fresh
+    # exhaustion: only 3 free pages left but slot 1 wants 3 after slot 0
+    # grows -- exhausted pool returns None (caller preempts)
+    pool.ensure(1, 17)
+    assert pool.free_count == 0
+    pool.free_slot(1)
+    freed = pool.free_slot(0)
+    assert freed == 3 and pool.free_count == 6
+    assert not pool.block_tables.any()
+    # recycled ids are handed out again (free list holds exactly 1..6)
+    again = pool.ensure(1, 24)
+    assert sorted(set(again)) == sorted(again) and len(again) == 3
+    assert set(again) <= set(range(1, 7))
+
+
+def test_pool_exhausted_returns_none():
+    pool = PagedKVPool(CFG, n_pages=4, page=8, max_slots=2,
+                       max_pages_per_seq=3)
+    assert pool.ensure(0, 17) is not None      # 3 pages
+    assert pool.ensure(1, 17) is None          # 1 page left, needs 3
+
+
+def test_pool_exceeding_per_seq_capacity_raises():
+    pool = PagedKVPool(CFG, n_pages=8, page=8, max_slots=1,
+                       max_pages_per_seq=2)
+    with pytest.raises(PoolExhausted):
+        pool.ensure(0, 17)
+
+
+def test_engine_page_reuse_across_requests():
+    """A pool too small for all requests at once still completes them by
+
+    recycling pages of finished sequences."""
+    reqs = _requests(CFG, n=6, max_new=4, lo=8, hi=13)
+    total_demand = sum(pages_for(len(r.prompt) + r.max_new_tokens, 8)
+                      for r in reqs)
+    _, paged, eng = _run_both(CFG, reqs, slots=2, n_pages=6)
+    assert all(r.done for r in paged)
+    assert eng.stats.pages_peak <= 6 < total_demand
+
+
+def test_scheduler_preemption_under_exhaustion():
+    """Two growing sequences cannot coexist in a 4-page pool: the younger
+
+    is evicted, requeued, and still produces the exact legacy output."""
+    rng = np.random.default_rng(9)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(2, CFG.vocab, 8).astype(np.int32),
+                    max_new_tokens=15)
+            for i in range(2)]
+    legacy, paged, eng = _run_both(CFG, reqs, slots=2, n_pages=4)
+    assert eng.stats.preemptions >= 1
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in paged]
+
+
+# -------------------------------------------------------------------------
+# termination edge cases (legacy fixes ride along)
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("engine_cls", [LegacyServeEngine, ServeEngine],
+                         ids=["legacy", "paged"])
+def test_eos_at_prefill_burns_no_decode_slot(engine_cls):
+    params = _params(CFG)
+    probe = [Request(uid=0, prompt=np.arange(2, 8, dtype=np.int32),
+                     max_new_tokens=4)]
+    engine_cls(CFG, params, slots=2, max_len=32).run(probe)
+    first = probe[0].out_tokens[0]
+
+    req = Request(uid=0, prompt=np.arange(2, 8, dtype=np.int32),
+                  max_new_tokens=4, eos_id=first)
+    eng = engine_cls(CFG, params, slots=2, max_len=32)
+    eng.run([req])
+    assert req.done and req.out_tokens == [first]
+    assert eng.stats.decode_steps == 0         # never entered a decode slot
+
+
+@pytest.mark.parametrize("engine_cls", [LegacyServeEngine, ServeEngine],
+                         ids=["legacy", "paged"])
+def test_cache_capacity_fully_used(engine_cls):
+    """max_len positions are writable: a prompt of L generates
+
+    1 + (max_len - L) tokens before the cache is full (the old guard lost
+    the final slot to an off-by-one)."""
+    params = _params(CFG)
+    L, max_len = 6, 16
+    req = Request(uid=0, prompt=np.arange(2, 2 + L, dtype=np.int32),
+                  max_new_tokens=64)
+    engine_cls(CFG, params, slots=1, max_len=max_len).run([req])
+    assert req.done
+    assert len(req.out_tokens) == 1 + (max_len - L)
+
+
+# -------------------------------------------------------------------------
+# throughput + scheduler shape bounding
+# -------------------------------------------------------------------------
+def test_bucketing_is_power_of_two_pages():
+    assert bucket_len(1, 8) == 8
+    assert bucket_len(8, 8) == 8
+    assert bucket_len(9, 8) == 16
+    assert bucket_len(33, 8) == 64
+    for n in range(1, 70):
+        b = bucket_len(n, 8)
+        assert b >= n and b % 8 == 0 and (b & (b - 1)) == 0
+
+
+def test_paged_throughput_beats_legacy_8_slots():
+    params = _params(CFG)
+    reqs = _requests(CFG, n=8, max_new=16, lo=6, hi=14)
+
+    def timed(engine_cls):
+        # warm-up run compiles; second run measures steady-state decode
+        engine_cls(CFG, params, slots=8, max_len=32).run(_clone(reqs))
+        eng = engine_cls(CFG, params, slots=8, max_len=32)
+        t0 = time.monotonic()
+        out = eng.run(_clone(reqs))
+        dt = time.monotonic() - t0
+        return sum(len(r.out_tokens) for r in out) / dt
+
+    legacy_tps = timed(LegacyServeEngine)
+    paged_tps = timed(ServeEngine)
+    assert paged_tps >= legacy_tps, (legacy_tps, paged_tps)
+
+
+# -------------------------------------------------------------------------
+# memsys hook: the DSE sees page-rounded batch KV traffic
+# -------------------------------------------------------------------------
+def test_kv_traffic_paged_accounting():
+    from repro.memsys.workload import (kv_bits_per_step, kv_traffic_paged,
+                                       make_traffic)
+    lens = [10, 17, 32]
+    t = kv_traffic_paged(CFG, lens, page=16)
+    assert t.n_pages == 1 + 2 + 2
+    expect = sum(kv_bits_per_step(CFG, -(-n // 16) * 16) for n in lens)
+    assert t.kv_bits_per_step == pytest.approx(expect)
+    exact = sum(kv_bits_per_step(CFG, n) for n in lens)
+    assert t.kv_bits_per_step_exact == pytest.approx(exact)
+    assert t.frag_bits_per_step >= 0
+    assert 0 < t.utilization <= 1
+    # page-aligned batch has zero fragmentation
+    t2 = kv_traffic_paged(CFG, [16, 32], page=16)
+    assert t2.frag_bits_per_step == pytest.approx(0.0)
+    # the hook rebinding a Traffic for the Eq.(3) DSE
+    base = make_traffic(CFG, "qmc", seq_len=2048)
+    rebased = t.apply(base)
+    assert rebased.kv_bits == pytest.approx(t.kv_bits_per_step)
+    assert rebased.weight_bits == pytest.approx(base.weight_bits)

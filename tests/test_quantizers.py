@@ -1,11 +1,14 @@
 """Unit + property tests for the quantizer layer (Algorithm 1 pieces)."""
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.extra.numpy as hnp  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core import qmc as qmclib
 from repro.core.noise import perturb_codes
