@@ -1,10 +1,13 @@
-"""Serving throughput: legacy per-slot engine vs paged continuous batching.
+"""Serving throughput: legacy per-slot engine vs paged continuous batching,
+plus the shared-system-prompt multi-tenant prefix-cache workload.
 
 Runs a fixed synthetic workload through both engines at slots ∈ {1, 4, 8},
 prints the standard ``name,us_per_call,derived`` CSV rows, and writes
 ``BENCH_serving.json`` with tokens/s and p50/p95 per-token decode latency
-per configuration, plus the memsys paged-KV traffic summary the §4 DSE
-consumes.
+per configuration, plus the memsys paged/prefix KV traffic summaries the
+§4 DSE consumes. The prefix-cache section runs N tenants whose prompts
+share one system prompt and reports hit rate, prefill-token reduction and
+tokens/s with the cache on vs off.
 
   PYTHONPATH=src python -m benchmarks.serving
 """
@@ -16,7 +19,7 @@ import os
 import jax
 import numpy as np
 
-from repro.memsys.workload import kv_traffic_paged
+from repro.memsys.workload import kv_traffic_paged, kv_traffic_prefix
 from repro.models.config import ModelConfig
 from repro.models.model import init_params
 from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
@@ -29,6 +32,7 @@ N_REQ = 8
 MAX_NEW = 16
 MAX_LEN = 64
 PAGE = 16
+SYS_PROMPT_LEN = 32               # shared multi-tenant prefix (2 pages)
 
 
 def _requests(seed: int = 7):
@@ -38,6 +42,19 @@ def _requests(seed: int = 7):
                                         size=int(L)).astype(np.int32),
                     max_new_tokens=MAX_NEW)
             for i, L in enumerate(rng.integers(8, 24, size=N_REQ))]
+
+
+def _tenant_requests(seed: int = 11):
+    """N tenants: one shared system prompt + a short unique user turn."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(2, CFG.vocab, SYS_PROMPT_LEN)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, CFG.vocab, int(L))]
+                    ).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i, L in enumerate(rng.integers(6, 14, size=N_REQ))]
 
 
 def _pcts(lat):
@@ -90,10 +107,66 @@ def run() -> dict:
         "kv_bits_per_step": t.kv_bits_per_step,
         "frag_bits_per_step": t.frag_bits_per_step,
         "utilization": t.utilization}
+    results["prefix_cache"] = {
+        "sys_prompt_len": SYS_PROMPT_LEN,
+        "slots": {str(s): _measure_prefix(params, s) for s in (4, 8)}}
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
     print(f"serving/json,0,{os.path.abspath(OUT)}")
     return results
+
+
+def _measure_prefix(params, slots: int) -> dict:
+    """Shared-system-prompt tenants, prefix cache on vs off."""
+    out = {}
+    for label, on in (("off", False), ("on", True)):
+        # warm-up pays jit compiles; a fresh engine measures steady state
+        # with an initially empty index (intra-batch sharing only)
+        ServeEngine(CFG, params, slots=slots, max_len=MAX_LEN,
+                    page_size=PAGE, prefix_cache=on).run(_tenant_requests())
+        eng = ServeEngine(CFG, params, slots=slots, max_len=MAX_LEN,
+                          page_size=PAGE, prefix_cache=on)
+        res = eng.run(_tenant_requests())
+        toks = sum(len(r.out_tokens) for r in res)
+        s = eng.stats
+        out[label] = {
+            "tokens": toks, "tokens_per_s": toks / s.wall_s,
+            "prefill_tokens": s.prefill_tokens,
+            "prefill_tokens_padded": s.prefill_tokens_padded,
+            "prompt_tokens": s.prompt_tokens,
+            "hit_rate": s.hit_rate,
+            "prefill_token_reduction": s.prefill_token_reduction,
+            "cache_hits": s.cache_hits,
+            "cow_copies": s.cow_copies}
+    speedup = (out["on"]["tokens_per_s"]
+               / max(out["off"]["tokens_per_s"], 1e-9))
+    out["prefill_speedup"] = speedup
+    # DSE views. "cold": the measured batch's prefill WRITES (the first
+    # tenant publishes, the rest hit). "steady": residency once the
+    # prefix is resident — every tenant aliases the shared pages,
+    # including the publisher, whose copy IS the shared set (listing it
+    # as a miss would double-count those pages).
+    reqs = _tenant_requests()
+    prompt_lens = [len(r.prompt) for r in reqs]
+    sys_cached = (SYS_PROMPT_LEN // PAGE) * PAGE
+    cold = kv_traffic_prefix(
+        CFG, prompt_lens, [0] + [sys_cached] * (len(reqs) - 1), page=PAGE)
+    steady = kv_traffic_prefix(
+        CFG, prompt_lens, [sys_cached] * len(reqs), page=PAGE)
+    out["dse"] = {
+        "hit_rate": cold.hit_rate,
+        "prefill_write_bits": cold.prefill_write_bits,
+        "prefill_write_bits_nocache": cold.prefill_write_bits_nocache,
+        "saved_prefill_write_bits": cold.saved_prefill_write_bits,
+        "resident_bits": steady.resident_bits,
+        "resident_bits_nocache": steady.resident_bits_nocache,
+        "n_pages": steady.n_pages,
+        "n_pages_nocache": steady.n_pages_nocache}
+    print(f"serving/prefix_s{slots},0,"
+          f"hit={out['on']['hit_rate']:.2f} "
+          f"prefill_reduction={out['on']['prefill_token_reduction']:.2f} "
+          f"speedup={speedup:.2f}x")
+    return out
 
 
 if __name__ == "__main__":

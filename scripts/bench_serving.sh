@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Regenerate BENCH_serving.json (serving throughput + prefix-cache
+# benchmark). CPU-only; run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}" \
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m benchmarks.serving "$@"

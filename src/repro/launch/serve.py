@@ -31,6 +31,11 @@ def main():
     ap.add_argument("--weights", choices=["fp16", "qmc"], default="qmc")
     ap.add_argument("--rho", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages copy-on-write")
+    ap.add_argument("--sys-prompt-len", type=int, default=0,
+                    help="prepend a shared system prompt of this length "
+                         "to every request (multi-tenant demo)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(
@@ -44,19 +49,27 @@ def main():
         print(f"[serve] QMC PTQ in {time.monotonic()-t0:.1f}s")
 
     rng = np.random.default_rng(args.seed)
+    sys_prompt = rng.integers(2, cfg.vocab, size=args.sys_prompt_len)
     reqs = [Request(uid=i,
-                    prompt=rng.integers(2, cfg.vocab,
-                                        size=args.prompt_len).astype(
-                                            np.int32),
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, cfg.vocab, size=args.prompt_len)]
+                    ).astype(np.int32),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
     eng = ServeEngine(cfg, params, slots=args.slots,
-                      max_len=args.prompt_len + args.new_tokens + 4)
+                      max_len=(args.sys_prompt_len + args.prompt_len
+                               + args.new_tokens + 4),
+                      prefix_cache=args.prefix_cache)
     eng.run(reqs)
     s = eng.stats
     print(f"[serve] {s.prefills} prefills, {s.decode_steps} decode steps, "
           f"{s.tokens_out} tokens in {s.wall_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s)")
+    if args.prefix_cache:
+        print(f"[serve] prefix cache: {s.cache_hits} hits, "
+              f"hit_rate={s.hit_rate:.2f}, prefill-token reduction="
+              f"{s.prefill_token_reduction:.2f}, {s.cow_copies} COW copies")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}...")
 

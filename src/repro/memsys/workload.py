@@ -128,6 +128,127 @@ def kv_traffic_paged(cfg: ModelConfig, seq_lens, *, page: int = 16,
                           resident_bits=bits, resident_bits_exact=bits_exact)
 
 
+@dataclasses.dataclass(frozen=True)
+class PrefixKVTraffic:
+    """Batched KV stream when prompt prefixes are served from cached pages.
+
+    Two effects of the prefix cache (``serve/prefix_cache.py``) reach the
+    memory system:
+
+      * **Prefill writes disappear for hit pages** — a cached page is
+        adopted by block-table aliasing, so its KV is never recomputed and
+        never re-written over LPDDR5. ``prefill_write_bits`` charges only
+        the uncached suffix pages (page-rounded, matching the pool's
+        allocation granule); ``_nocache`` is the same batch without the
+        cache.
+      * **Residency dedups shared pages** — one physical page serves every
+        sequence that aliases it, so the pool holds
+        ``private + unique-shared`` pages, not the sum of per-sequence
+        footprints.
+
+    Decode *reads* do not change: every sequence still streams its whole
+    mapped table each step (shared pages are re-read per sequence), so
+    ``kv_bits_per_step`` equals the plain paged model's."""
+    page: int
+    n_seqs: int
+    n_pages: int                      # physical pages held (dedup'd)
+    n_pages_nocache: int              # sum of per-seq footprints
+    hit_rate: float                   # cached / total prompt tokens
+    prefill_write_bits: float         # KV written during prefill, with cache
+    prefill_write_bits_nocache: float
+    kv_bits_per_step: float           # decode stream (same as paged)
+    resident_bits: float              # pool bits held (dedup'd)
+    resident_bits_nocache: float
+
+    @property
+    def saved_prefill_write_bits(self) -> float:
+        return self.prefill_write_bits_nocache - self.prefill_write_bits
+
+    @property
+    def saved_resident_bits(self) -> float:
+        return self.resident_bits_nocache - self.resident_bits
+
+    def apply(self, traffic: "Traffic",
+              amortize_tokens: Optional[int] = None) -> "Traffic":
+        """Rebind a Traffic's KV stream to this batch for the Eq. (3)/(4)
+        DSE. With ``amortize_tokens`` (expected decode tokens per request)
+        the per-request prefill writes the cache did NOT save are spread
+        over the generated tokens and added to the per-step KV bits, so
+        the DSE sees prefill traffic shrink with the hit rate."""
+        kv = self.kv_bits_per_step
+        if amortize_tokens:
+            kv += self.prefill_write_bits / (self.n_seqs * amortize_tokens)
+        return dataclasses.replace(
+            traffic, name=f"{traffic.name}+prefix_b{self.n_seqs}",
+            kv_bits=kv)
+
+
+def kv_traffic_prefix(cfg: ModelConfig, prompt_lens, cached_lens,
+                      seq_lens=None, *, unique_cached_tokens=None,
+                      page: int = 16,
+                      kv_dtype_bits: int = 16) -> PrefixKVTraffic:
+    """KV traffic/residency for a batch whose prompts hit the prefix cache.
+
+    ``prompt_lens[i]`` is sequence i's prompt length; ``cached_lens[i]``
+    how many of those tokens were served from cached pages (whole pages,
+    so a multiple of ``page``; 0 = miss). ``seq_lens`` are current total
+    lengths for the decode stream (default: the prompts, i.e. step 1).
+    ``unique_cached_tokens`` is the number of distinct cached tokens the
+    hits alias (default: the longest cached prefix — the single shared
+    system prompt case); sharing dedups residency but never decode reads.
+
+    Sequences are *consumers* of the shared set. A publisher whose pages
+    became the cached copy should be listed with its prefix as cached
+    (its footprint IS the shared set) when computing residency — listing
+    it as a miss charges those pages both privately and as shared. For
+    prefill-write accounting the opposite holds: the publisher really
+    wrote every page, so list it as a miss there (see
+    ``benchmarks/serving.py`` for the two views side by side).
+    """
+    prompt_lens = [int(x) for x in prompt_lens]
+    cached_lens = [int(x) for x in cached_lens]
+    if len(prompt_lens) != len(cached_lens):
+        raise ValueError("prompt_lens and cached_lens must align")
+    for lp, lc in zip(prompt_lens, cached_lens):
+        if lc % page or lc > lp:
+            raise ValueError(
+                f"cached length {lc} must be whole pages <= prompt {lp}")
+    seq_lens = ([int(x) for x in seq_lens] if seq_lens is not None
+                else prompt_lens)
+    if unique_cached_tokens is None:
+        unique_cached_tokens = max(cached_lens, default=0)
+
+    def kv_token_bits(n_tokens: int) -> float:
+        """Sequence-length-dependent KV bits (excludes O(1) SSM state)."""
+        return (kv_bits_per_step(cfg, n_tokens, kv_dtype_bits)
+                - kv_bits_per_step(cfg, 0, kv_dtype_bits))
+
+    write = write_nocache = 0.0
+    pages = pages_nocache = 0
+    for lp, lc in zip(prompt_lens, cached_lens):
+        full = pages_for(lp, page)
+        pages_nocache += full
+        pages += full - lc // page
+        # prefill writes are page-rounded like the allocator's granule
+        write += kv_token_bits(full * page - lc)
+        write_nocache += kv_token_bits(full * page)
+    shared_pages = pages_for(unique_cached_tokens, page) \
+        if unique_cached_tokens else 0
+    pages += shared_pages
+    paged = kv_traffic_paged(cfg, seq_lens, page=page,
+                             kv_dtype_bits=kv_dtype_bits)
+    total_prompt = sum(prompt_lens)
+    return PrefixKVTraffic(
+        page=page, n_seqs=len(prompt_lens), n_pages=pages,
+        n_pages_nocache=pages_nocache,
+        hit_rate=(sum(cached_lens) / total_prompt if total_prompt else 0.0),
+        prefill_write_bits=write,
+        prefill_write_bits_nocache=write_nocache,
+        kv_bits_per_step=paged.kv_bits_per_step,
+        resident_bits=pages * kv_token_bits(page),
+        resident_bits_nocache=pages_nocache * kv_token_bits(page))
+
+
 def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,
                  qmc: QMCConfig = QMCConfig(), mx: MXConfig = MXConfig(),
                  legacy_flash: bool = False) -> Traffic:

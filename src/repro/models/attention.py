@@ -126,9 +126,16 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
                window: Optional[int],
                cache: Optional[dict] = None,
                pos: Optional[jax.Array] = None,
+               valid_len: Optional[jax.Array] = None,
                tap=None, use_pallas: bool = False
                ) -> Tuple[jax.Array, Optional[dict]]:
-    """Self-attention mixer. cache={'k','v'} [B,T,KV,D] (decode/prefill)."""
+    """Self-attention mixer. cache={'k','v'} [B,T,KV,D] (decode/prefill).
+
+    ``valid_len`` [B] (absolute position bound, prompt start + true length)
+    tightens the cache-validity mask when the input is right-padded to a
+    bucket, and routes paged writes of padding garbage to the null page —
+    required for suffix prefill at a nonzero start position, where padding
+    columns would otherwise scatter into the slot's live pages."""
     b, s, d_model = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     if tap:
@@ -156,12 +163,14 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
                 tap("wo", out.reshape(b, s, nh * hd))
             return linear(out.reshape(b, s, nh * hd), p["wo"],
                           p.get("bo"), use_pallas, tp_dim=0), None
-    elif "k_pages" in cache:                               # paged decode
-        new_cache = paged_cache_write(cache, k, v, positions[:, -1])
+    elif "k_pages" in cache:                 # paged decode / suffix prefill
+        new_cache = paged_cache_write(cache, k, v, positions,
+                                      valid_len=valid_len)
         k_all, v_all = paged_cache_read(new_cache, x.dtype, nkv, hd)
         t_max = k_all.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(t_max)[None, :], (b, t_max))
-        valid = (positions[:, -1] + 1)
+        valid = (valid_len if valid_len is not None
+                 else positions[:, -1] + 1)
     else:
         t_max = cache["k"].shape[1]
         pos0 = 0 if s > 1 else (pos if pos is not None
@@ -169,7 +178,8 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
         new_cache = _cache_write(cache, k, v, pos0)
         k_all, v_all = _cache_read(new_cache, x.dtype, nkv, hd)
         kv_pos = jnp.broadcast_to(jnp.arange(t_max)[None, :], (b, t_max))
-        valid = (positions[:, -1] + 1)
+        valid = (valid_len if valid_len is not None
+                 else positions[:, -1] + 1)
 
     out = attend(q, k_all if cache is not None else k,
                  v_all if cache is not None else v,
@@ -225,38 +235,45 @@ def _cache_read(cache: dict, dtype, n_kv: int, hd: int):
 
 
 def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
-                      pos: jax.Array) -> dict:
-    """Scatter one decode token per sequence into the paged arena.
+                      positions: jax.Array,
+                      valid_len: Optional[jax.Array] = None) -> dict:
+    """Scatter K/V tokens into the paged arena (decode AND suffix prefill).
 
     cache holds ``k_pages/v_pages [n_pages, page, kv_dim]`` plus
-    ``block_tbl [B, max_pages]``; ``pos [B]`` is each sequence's absolute
-    write position. Inactive lanes carry an all-null block table and land on
-    the reserved null page 0, which no live table maps."""
-    b, s, n_kv, hd = k.shape            # s == 1 (decode only)
+    ``block_tbl [B, max_pages]``; ``positions [B, S]`` are absolute write
+    positions (S == 1 for decode, S == the suffix bucket for prefill).
+    Inactive decode lanes carry an all-null block table and land on the
+    reserved null page 0, which no live table maps. ``valid_len`` [B]
+    additionally routes right-padding columns (positions >= valid_len) to
+    the null page — without it a padded suffix bucket could index past the
+    slot's live pages and, after clipping, corrupt them."""
+    b, s, n_kv, hd = k.shape
     page = cache["k_pages"].shape[1]
     tbl = cache["block_tbl"]
-    blk = jnp.clip(pos // page, 0, tbl.shape[1] - 1)
-    page_idx = jnp.take_along_axis(tbl, blk[:, None], axis=1)[:, 0]  # [B]
-    off = pos % page
+    blk = jnp.clip(positions // page, 0, tbl.shape[1] - 1)       # [B, S]
+    page_idx = jnp.take_along_axis(tbl, blk, axis=1)             # [B, S]
+    if valid_len is not None:
+        page_idx = jnp.where(positions < valid_len[:, None], page_idx, 0)
+    off = positions % page
     new = dict(cache)
     if "k_scale_pages" in cache:
         from repro.models.kvcache import quantize_kv
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
         new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
-            kq.reshape(b, n_kv * hd))
+            kq.reshape(b, s, n_kv * hd))
         new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
-            vq.reshape(b, n_kv * hd))
+            vq.reshape(b, s, n_kv * hd))
         new["k_scale_pages"] = cache["k_scale_pages"].at[page_idx, off].set(
-            ks.reshape(b, n_kv))
+            ks.reshape(b, s, n_kv))
         new["v_scale_pages"] = cache["v_scale_pages"].at[page_idx, off].set(
-            vs.reshape(b, n_kv))
+            vs.reshape(b, s, n_kv))
         return new
     dt = cache["k_pages"].dtype
     new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
-        k.astype(dt).reshape(b, n_kv * hd))
+        k.astype(dt).reshape(b, s, n_kv * hd))
     new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
-        v.astype(dt).reshape(b, n_kv * hd))
+        v.astype(dt).reshape(b, s, n_kv * hd))
     return new
 
 

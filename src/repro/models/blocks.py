@@ -129,7 +129,8 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
         mix, ac = attn_block(p["attn"], h, cfg, positions=positions,
                              window=window,
                              cache=cache.get("attn") if cache else None,
-                             pos=pos, tap=_sub(tap, "attn"),
+                             pos=pos, valid_len=valid_len,
+                             tap=_sub(tap, "attn"),
                              use_pallas=use_pallas)
         if ac is not None:
             new_cache["attn"] = ac
@@ -144,7 +145,8 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
         mix_a, ac = attn_block(p["attn"], h, cfg, positions=positions,
                                window=window,
                                cache=cache.get("attn") if cache else None,
-                               pos=pos, tap=_sub(tap, "attn"),
+                               pos=pos, valid_len=valid_len,
+                               tap=_sub(tap, "attn"),
                                use_pallas=use_pallas)
         mix_m, mc = mamba_block(p["mamba"], h, cfg,
                                 cache=cache.get("mamba") if cache else None,

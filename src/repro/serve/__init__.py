@@ -1,14 +1,19 @@
 """serve subsystem: paged KV pool + continuous-batching engines.
 
 Public surface:
-  * ``engine.ServeEngine``        — paged, batched-decode engine (default)
+  * ``engine.ServeEngine``        — paged, batched-decode engine (default;
+    ``prefix_cache=True`` shares prompt-prefix pages copy-on-write)
   * ``engine.LegacyServeEngine``  — per-slot baseline
   * ``engine.Request`` / ``engine.EngineStats``
-  * ``paged_kv.PagedKVPool``      — block-table page allocator
+  * ``paged_kv.PagedKVPool``      — refcounted block-table page allocator
+  * ``prefix_cache.PrefixCache``  — radix index of cached full KV pages
   * ``scheduler.FifoScheduler``   — admission + preemption policy
 """
 from repro.serve.engine import (EngineStats, LegacyServeEngine,  # noqa: F401
                                 Request, ServeEngine)
-from repro.serve.paged_kv import PagedKVPool, PoolExhausted  # noqa: F401
-from repro.serve.scheduler import (FifoScheduler,  # noqa: F401
+from repro.serve.paged_kv import (PageAccountingError,  # noqa: F401
+                                  PagedKVPool, PoolExhausted)
+from repro.serve.prefix_cache import (PrefixCache,  # noqa: F401
+                                      PrefixCacheStats)
+from repro.serve.scheduler import (Admission, FifoScheduler,  # noqa: F401
                                    SchedulerConfig, bucket_len)

@@ -31,7 +31,9 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step, prefill
 from repro.serve.paged_kv import (PagedKVPool, PoolExhausted, make_adopt,
-                                  make_bucketed_prefill, pages_for)
+                                  make_bucketed_prefill, make_page_copy,
+                                  make_paged_prefill, pages_for)
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (FifoScheduler, SchedulerConfig,
                                    bucket_len)
 
@@ -55,6 +57,14 @@ class EngineStats:
     preemptions: int = 0
     pages_peak: int = 0
     tokens_discarded: int = 0        # emitted then erased by preemption
+    # prefix cache (all zero when caching is off)
+    prompt_tokens: int = 0           # prompt tokens across admissions
+    prefill_tokens: int = 0          # tokens actually prefilled (suffixes)
+    prefill_tokens_padded: int = 0   # same, after pow2 bucketing
+    cache_hits: int = 0              # admissions served partly from cache
+    cache_hit_tokens: int = 0        # prompt tokens adopted from cache
+    cow_copies: int = 0              # shared pages privatized on write
+    cache_evictions: int = 0         # cached pages evicted under pressure
     # per decode call: wall seconds and tokens emitted by that call (the
     # emitted count includes tokens a later preemption discards — the jit
     # work was really done; tokens_discarded records how many)
@@ -64,6 +74,18 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of admitted prompt tokens served from cached pages."""
+        return (self.cache_hit_tokens / self.prompt_tokens
+                if self.prompt_tokens else 0.0)
+
+    @property
+    def prefill_token_reduction(self) -> float:
+        """1 - (tokens prefilled / tokens a cache-less engine prefills)."""
+        return (1.0 - self.prefill_tokens / self.prompt_tokens
+                if self.prompt_tokens else 0.0)
 
     def per_token_latencies(self) -> List[float]:
         return [s / t for s, t in zip(self.step_seconds, self.step_tokens)
@@ -100,16 +122,31 @@ class ServeEngine:
     logical capacity (prompt + generated). ``n_pages`` sizes the shared
     pool — the default fits every slot at full length, so preemption only
     occurs when the caller shrinks it (memory-pressure experiments).
+
+    ``prefix_cache=True`` keeps finished prompts' full KV pages in a radix
+    index (``serve/prefix_cache.py``): admissions whose prompt shares a
+    cached page-aligned prefix adopt those pages copy-on-write and prefill
+    only the uncached suffix. The pool and arena then persist across
+    ``run()`` calls so a shared system prompt is paid for once per server,
+    not once per batch. Requires an attention-only stack — KV pages cannot
+    snapshot SSM/conv recurrent state.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 max_prefill_tokens: Optional[int] = None):
+                 max_prefill_tokens: Optional[int] = None,
+                 prefix_cache: bool = False):
         if cfg.is_encdec or cfg.n_vis_tokens:
             raise NotImplementedError(
                 "paged engine covers decoder-only models; use "
                 "LegacyServeEngine for encdec/vlm")
+        if prefix_cache and not all(k.startswith("attn")
+                                    for k in cfg.pattern):
+            raise NotImplementedError(
+                "prefix caching shares attention KV pages; SSM/conv state "
+                "is not page-addressable — disable it for hybrid/mamba "
+                f"stacks (pattern={cfg.pattern})")
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -125,12 +162,52 @@ class ServeEngine:
         self._decode = _decode_jit(cfg)
         self._prefill = make_bucketed_prefill(cfg, cache_dtype)
         self._adopt = make_adopt(cfg, page_size)
+        self._suffix_prefill = make_paged_prefill(cfg)
+        self._page_copy = make_page_copy(cfg)
+        # pool + arena (+ prefix index) persist across run() calls so
+        # cached pages survive between batches, server-style
+        self._use_prefix = prefix_cache
+        self._pool: Optional[PagedKVPool] = None
+        self._arena = None
+        self.prefix_cache: Optional[PrefixCache] = None
 
-    def run(self, requests: List[Request],
-            greedy: bool = True) -> List[Request]:
+    def _ensure_pool(self) -> PagedKVPool:
+        if self._pool is None:
+            self._pool = PagedKVPool(
+                self.cfg, n_pages=self.n_pages, page=self.page,
+                max_slots=self.slots,
+                max_pages_per_seq=self.max_pages_per_seq,
+                cache_dtype=self.cache_dtype)
+            self._arena = self._pool.init_arena()
+            if self._use_prefix:
+                self.prefix_cache = PrefixCache(self._pool)
+        return self._pool
+
+    def _alloc(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """pool.ensure with LRU eviction of unpinned cached pages as the
+        fallback; None only when eviction cannot help either."""
+        while True:
+            fresh = self._pool.ensure(slot, n_tokens)
+            if fresh is not None:
+                return fresh
+            if self.prefix_cache is None or not self.prefix_cache.evict(1):
+                return None
+            self.stats.cache_evictions += 1
+
+    def run(self, requests: List[Request], greedy: bool = True,
+            on_token=None) -> List[Request]:
         """Process all requests to completion; returns them with outputs.
 
-        Stats describe this run only (a fresh EngineStats per call)."""
+        ``on_token(slot, token, request)`` — when given — streams every
+        emitted token: once after the prefill that produces a request's
+        first token (slot is -1 if the request finished at prefill without
+        occupying a decode slot) and once per active slot after each jitted
+        decode step. A preempted request re-streams from its first token
+        when recomputed; consumers that must not see duplicates should
+        key on ``request.uid`` and truncate.
+
+        Stats describe this run only (a fresh EngineStats per call); the
+        prefix cache and its pages persist across calls."""
         if not greedy:
             raise NotImplementedError("only greedy decoding is implemented")
         self.stats = EngineStats()
@@ -139,20 +216,36 @@ class ServeEngine:
             if len(r.prompt) > self.max_len:
                 raise ValueError(f"request {r.uid}: prompt length "
                                  f"{len(r.prompt)} > max_len={self.max_len}")
-        pool = PagedKVPool(self.cfg, n_pages=self.n_pages, page=self.page,
-                           max_slots=self.slots,
-                           max_pages_per_seq=self.max_pages_per_seq,
-                           cache_dtype=self.cache_dtype)
+        pool = self._ensure_pool()
+        # the pool persists across runs: release slot pages a previously
+        # aborted run may have left mapped (cached pages survive), and
+        # re-base cumulative counters so stats cover this run only
+        for s in range(self.slots):
+            if pool.slot_pages[s]:
+                pool.free_slot(s)
+        pool.pages_peak = pool.used_count
+        cow0 = pool.cow_copies
+        cache = self.prefix_cache
         sched = FifoScheduler(SchedulerConfig(
             page=self.page, max_prefill_tokens=self.max_prefill_tokens,
-            max_len=self.max_len))
+            max_len=self.max_len), prefix_cache=cache)
         for r in requests:
             sched.enqueue(r)
 
-        arena = pool.init_arena()
         active: List[Optional[Request]] = [None] * self.slots
         pos = np.zeros(self.slots, np.int64)
         next_tok = np.zeros(self.slots, np.int64)
+
+        def emit(s: int, tok: int, req: Request) -> None:
+            if on_token is not None:
+                on_token(s, tok, req)
+
+        def publish(req: Request, s: int) -> None:
+            """Index the slot's full prompt pages (prefill KV reuse)."""
+            if cache is not None:
+                n_full = len(req.prompt) // self.page
+                if n_full:
+                    cache.insert(req.prompt, pool.slot_pages[s][:n_full])
 
         def finish(s: int) -> None:
             active[s].done = True
@@ -172,39 +265,124 @@ class ServeEngine:
             sched.on_preempt(victim)
             sched.requeue_front(req)
 
+        def pad_bucket(tokens):
+            """Right-pad to the pow2 prefill bucket; returns (toks,
+            last_logit_row) and charges the prefill stats."""
+            bucket = bucket_len(len(tokens), self.page)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :len(tokens)] = tokens
+            self.stats.prefills += 1
+            self.stats.prefill_tokens += len(tokens)
+            self.stats.prefill_tokens_padded += bucket
+            return toks, len(tokens) - 1
+
+        def record(req, tok: int) -> bool:
+            """Record the prefill token; True when it finished the request
+            (EOS / budget / full cache) so no decode slot is needed."""
+            req.out_tokens.append(tok)
+            self.stats.tokens_out += 1
+            return _finished(req, len(req.prompt), self.max_len)
+
+        def seat(req, s: int, tok: int) -> None:
+            """Shared admission epilogue: the request occupies slot s."""
+            active[s] = req
+            pos[s] = len(req.prompt)
+            next_tok[s] = tok
+            sched.on_admit(s)
+            emit(s, tok, req)
+
+        def retire(req, s: int, tok: int) -> None:
+            """Finished at prefill: release the slot's pages (if any) and
+            stream the lone token with slot -1 (never entered decode)."""
+            req.done = True
+            pool.free_slot(s)
+            emit(-1, tok, req)
+
+        def admit_hit(adm, s: int) -> bool:
+            """Cache-hit admission: adopt shared pages, COW if the
+            recomputed final token lands in one, prefill the suffix
+            against the paged arena. Returns False if pages ran out."""
+            req = adm.req
+            L = len(req.prompt)
+            start = adm.suffix_start
+            pool.adopt(s, adm.cached_pages)
+            if self._alloc(s, L) is None:
+                pool.free_slot(s)
+                return False
+            cow = pool.cow(s, start)
+            while cow is False:
+                if not cache.evict(1):
+                    pool.free_slot(s)
+                    return False
+                self.stats.cache_evictions += 1
+                cow = pool.cow(s, start)
+            if cow is not None:
+                self._arena = self._page_copy(self._arena, *cow)
+            toks, last = pad_bucket(req.prompt[start:])
+            slot_cache = pool.install_tables(self._arena, slot=s)
+            logits, self._arena = self._suffix_prefill(
+                self.params, slot_cache, jnp.asarray(toks),
+                jnp.asarray([start], jnp.int32),
+                jnp.asarray([L], jnp.int32))
+            self.stats.cache_hits += 1
+            self.stats.cache_hit_tokens += start
+            publish(req, s)
+            tok = int(jnp.argmax(logits[0, last]))
+            if record(req, tok):
+                retire(req, s, tok)
+            else:
+                seat(req, s, tok)
+            return True
+
+        def admit_miss(adm, s: int) -> bool:
+            """Contiguous bucketed prefill + page adoption (original
+            path); publishes the finished pages to the index."""
+            req = adm.req
+            L = len(req.prompt)
+            toks, last = pad_bucket(req.prompt)
+            logits, contig = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([L], jnp.int32))
+            tok = int(jnp.argmax(logits[0, last]))
+            if record(req, tok):
+                retire(req, s, tok)  # e.g. prefill emitted EOS: no pages
+                return True          # were allocated, contig KV dropped
+            if self._alloc(s, L) is None:
+                req.out_tokens = []  # undo record(); re-prefill later
+                self.stats.tokens_out -= 1
+                return False
+            ids = list(pool.slot_pages[s])
+            ids += [0] * (toks.shape[1] // self.page - len(ids))
+            self._arena = self._adopt(self._arena, contig,
+                                      jnp.asarray(ids, jnp.int32), s)
+            publish(req, s)
+            seat(req, s, tok)
+            return True
+
         def admit() -> None:
-            nonlocal arena
             sched.start_round()
             free_slots = [s for s in range(self.slots)
                           if active[s] is None]
             while free_slots:
-                req = sched.next_admission(pool.free_count)
-                if req is None:
+                capacity = pool.free_count + (cache.evictable_pages()
+                                              if cache else 0)
+                adm = sched.next_admission(capacity)
+                if adm is None:
                     break
-                L = len(req.prompt)
-                bucket = bucket_len(L, self.page)
-                toks = np.zeros((1, bucket), np.int32)
-                toks[0, :L] = req.prompt
-                logits, contig = self._prefill(
-                    self.params, jnp.asarray(toks),
-                    jnp.asarray([L], jnp.int32))
-                self.stats.prefills += 1
-                tok = int(jnp.argmax(logits[0, L - 1]))
-                req.out_tokens.append(tok)
-                self.stats.tokens_out += 1
-                if _finished(req, L, self.max_len):
-                    req.done = True     # e.g. prefill emitted EOS: no slot
-                    continue
-                s = free_slots.pop(0)
-                pool.ensure(s, L)       # cannot fail: admission checked
-                ids = list(pool.slot_pages[s])
-                ids += [0] * (bucket // self.page - len(ids))
-                arena = self._adopt(arena, contig,
-                                    jnp.asarray(ids, jnp.int32), s)
-                active[s] = req
-                pos[s] = L
-                next_tok[s] = tok
-                sched.on_admit(s)
+                self.stats.prompt_tokens += len(adm.req.prompt)
+                s = free_slots[0]
+                ok = (admit_hit(adm, s) if adm.cached_pages
+                      else admit_miss(adm, s))
+                if not ok and adm.cached_pages:
+                    # the hit pinned its matched pages, which may be the
+                    # very pages the capacity check promised as evictable;
+                    # degrade to an uncached admission that can evict them
+                    ok = admit_miss(adm, s)
+                if not ok:          # promised pages vanished; retry later
+                    sched.requeue_front(adm.req)
+                    break
+                if active[s] is adm.req:
+                    free_slots.pop(0)
 
         admit()
         while any(a is not None for a in active) or sched.pending:
@@ -215,14 +393,15 @@ class ServeEngine:
                         f"({self.n_pages} pages)")
                 break
             # every active slot must own the page its next token writes to;
-            # on exhaustion evict the youngest younger slot — or self, if
-            # none is younger (oldest-first order makes progress certain)
+            # on exhaustion first evict unpinned cached pages, then the
+            # youngest younger slot — or self, if none is younger
+            # (oldest-first order makes progress certain)
             order = sorted((s for s in range(self.slots)
                             if active[s] is not None),
                            key=lambda s: sched.admitted_at[s])
             for s in order:
                 while (active[s] is not None
-                       and pool.ensure(s, int(pos[s]) + 1) is None):
+                       and self._alloc(s, int(pos[s]) + 1) is None):
                     victim = sched.choose_victim(s)
                     if victim is not None:
                         preempt(victim)
@@ -236,10 +415,11 @@ class ServeEngine:
                     preempt(s)      # yield to older slots; retry later
 
             ts = time.monotonic()
-            cache_in = pool.install_tables(arena)
+            cache_in = pool.install_tables(self._arena)
             toks = jnp.asarray(next_tok[:, None].astype(np.int32))
             posv = jnp.asarray(pos.astype(np.int32))
-            logits, arena = self._decode(self.params, toks, cache_in, posv)
+            logits, self._arena = self._decode(self.params, toks, cache_in,
+                                               posv)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             self.stats.decode_steps += 1
 
@@ -254,6 +434,7 @@ class ServeEngine:
                 req.out_tokens.append(tok)
                 self.stats.tokens_out += 1
                 emitted += 1
+                emit(s, tok, req)
                 if _finished(req, int(pos[s]), self.max_len):
                     finish(s)
             self.stats.step_seconds.append(time.monotonic() - ts)
@@ -262,6 +443,7 @@ class ServeEngine:
 
         self.stats.preemptions = sched.preemptions
         self.stats.pages_peak = max(self.stats.pages_peak, pool.pages_peak)
+        self.stats.cow_copies = pool.cow_copies - cow0
         self.stats.wall_s = time.monotonic() - t0
         return requests
 

@@ -27,12 +27,21 @@ Host-side metadata (free list, block tables, per-slot lengths) lives here;
 the device arena itself is an ordinary cache pytree built by
 ``models.kvcache.paged_init_cache`` and threaded through ``jax.jit`` by the
 engine. Page 0 is reserved as the null page for inactive decode lanes.
+
+Pages are **reference counted** so the prefix cache
+(``serve/prefix_cache.py``) can alias one physical page into many block
+tables: a page's refcount is the number of slot mappings plus one if the
+prefix-cache index holds it. A shared page (refcount > 1) is never
+scattered into — the first divergent write goes through :meth:`cow`,
+which hands the slot a private copy and decrements the shared count.
+The free list only ever holds refcount-0 pages; double-frees and frees of
+still-referenced pages raise instead of silently corrupting the arena.
 """
 from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +56,12 @@ class PoolExhausted(Exception):
     """Raised when an allocation cannot be satisfied even after preemption."""
 
 
+class PageAccountingError(AssertionError):
+    """Refcount / free-list invariant violation (a COW or lifetime bug)."""
+
+
 class PagedKVPool:
-    """Free-list page allocator + per-slot block tables.
+    """Free-list page allocator + per-slot block tables + page refcounts.
 
     Pure host-side bookkeeping: device state is the arena pytree the engine
     owns. ``n_pages`` counts usable pages; one extra null page (id 0) is
@@ -68,10 +81,13 @@ class PagedKVPool:
         self.cache_dtype = cache_dtype
         # page 0 = null page -> usable ids are 1..n_pages
         self.free: deque = deque(range(1, n_pages + 1))
+        self._free_set = set(self.free)      # O(1) double-free detection
+        self.ref = np.zeros(n_pages + 1, np.int32)   # refcount per page id
         self.slot_pages: List[List[int]] = [[] for _ in range(max_slots)]
         self.block_tables = np.zeros((max_slots, max_pages_per_seq),
                                      np.int32)
         self.pages_peak = 0
+        self.cow_copies = 0
         self._tbl_dirty = True
         self._tbl_dev = None
 
@@ -84,14 +100,60 @@ class PagedKVPool:
     def used_count(self) -> int:
         return self.n_pages - len(self.free)
 
+    @property
+    def pinned_count(self) -> int:
+        """Pages mapped by at least one live slot (never evictable)."""
+        return len({p for pages in self.slot_pages for p in pages})
+
+    @property
+    def cached_only_count(self) -> int:
+        """Pages held only by the prefix-cache index (evictable)."""
+        return self.used_count - self.pinned_count
+
     def can_fit(self, n_tokens: int) -> bool:
         return pages_for(n_tokens, self.page) <= len(self.free)
+
+    def _pop_free(self) -> int:
+        pid = self.free.popleft()
+        self._free_set.discard(pid)
+        if self.ref[pid] != 0:
+            raise PageAccountingError(
+                f"page {pid} on the free list with refcount "
+                f"{self.ref[pid]}")
+        self.ref[pid] = 1
+        return pid
+
+    def release(self, pid: int) -> bool:
+        """Drop one reference to pid; recycle it when the count hits 0.
+
+        Returns True when the page actually went back to the free list.
+        Raises :class:`PageAccountingError` on double-free (page already
+        free) or on a refcount underflow."""
+        if pid in self._free_set:
+            raise PageAccountingError(f"double free of page {pid}")
+        if self.ref[pid] <= 0:
+            raise PageAccountingError(
+                f"release of page {pid} with refcount {self.ref[pid]}")
+        self.ref[pid] -= 1
+        if self.ref[pid] == 0:
+            self.free.append(pid)
+            self._free_set.add(pid)
+            return True
+        return False
+
+    def retain(self, pid: int) -> None:
+        """Add a reference (the prefix cache publishing a page)."""
+        if pid in self._free_set or self.ref[pid] <= 0:
+            raise PageAccountingError(
+                f"retain of unallocated page {pid}")
+        self.ref[pid] += 1
 
     def ensure(self, slot: int, n_tokens: int) -> Optional[List[int]]:
         """Grow slot's allocation to cover n_tokens positions.
 
         Returns the list of newly allocated page ids, or None if the free
-        list cannot satisfy the request (caller decides whom to preempt)."""
+        list cannot satisfy the request (caller decides whom to preempt or
+        which cached pages to evict)."""
         have = len(self.slot_pages[slot])
         need = pages_for(n_tokens, self.page)
         if need > self.max_pages_per_seq:
@@ -102,7 +164,7 @@ class PagedKVPool:
             return []
         if need - have > len(self.free):
             return None
-        fresh = [self.free.popleft() for _ in range(need - have)]
+        fresh = [self._pop_free() for _ in range(need - have)]
         for j, pid in enumerate(fresh, start=have):
             self.slot_pages[slot].append(pid)
             self.block_tables[slot, j] = pid
@@ -110,11 +172,51 @@ class PagedKVPool:
         self.pages_peak = max(self.pages_peak, self.used_count)
         return fresh
 
+    def adopt(self, slot: int, page_ids: List[int]) -> None:
+        """Map already-live (cache-held) pages into an empty slot's table.
+
+        The slot shares the pages read-only: each gains a reference, and a
+        later write into one must go through :meth:`cow` first."""
+        if self.slot_pages[slot]:
+            raise PageAccountingError(
+                f"adopt into non-empty slot {slot}")
+        for j, pid in enumerate(page_ids):
+            self.retain(pid)
+            self.slot_pages[slot].append(pid)
+            self.block_tables[slot, j] = pid
+        self._tbl_dirty = True
+        self.pages_peak = max(self.pages_peak, self.used_count)
+
+    def cow(self, slot: int, token_pos: int):
+        """Make the page holding ``token_pos`` private to ``slot``.
+
+        Returns None when the page is already private (refcount 1),
+        ``(src, dst)`` when a fresh page ``dst`` was mapped in place of the
+        shared ``src`` — the caller must copy the device page contents —
+        or False when the free list is empty (caller evicts/preempts and
+        retries). The shared page's refcount is decremented; it is never
+        written."""
+        j = token_pos // self.page
+        pid = self.slot_pages[slot][j]
+        if self.ref[pid] == 1:
+            return None
+        if not self.free:
+            return False
+        dst = self._pop_free()
+        self.slot_pages[slot][j] = dst
+        self.block_tables[slot, j] = dst
+        self.ref[pid] -= 1          # shared copy stays live elsewhere
+        self._tbl_dirty = True
+        self.cow_copies += 1
+        self.pages_peak = max(self.pages_peak, self.used_count)
+        return pid, dst
+
     def free_slot(self, slot: int) -> int:
-        """Recycle all of a slot's pages; returns how many were freed."""
-        pages = self.slot_pages[slot]
-        n = len(pages)
-        self.free.extend(pages)
+        """Drop the slot's references; returns how many pages were recycled
+        (pages still held by the prefix cache stay allocated)."""
+        n = 0
+        for pid in self.slot_pages[slot]:
+            n += bool(self.release(pid))
         self.slot_pages[slot] = []
         self.block_tables[slot, :] = 0
         self._tbl_dirty = True
@@ -136,9 +238,14 @@ class PagedKVPool:
                                    self.max_slots, self.max_pages_per_seq,
                                    self.cache_dtype)
 
-    def install_tables(self, arena):
-        """Return arena with current block tables written into every group."""
+    def install_tables(self, arena, slot: Optional[int] = None):
+        """Return arena with current block tables written into every group.
+
+        ``slot`` narrows the tables to that one slot's row (batch 1) — the
+        view the paged suffix prefill runs against."""
         tbl = self.device_tables(self.cfg.n_groups)
+        if slot is not None:
+            tbl = tbl[:, slot:slot + 1]
         out = {}
         for key, grp in arena.items():
             grp = dict(grp)
@@ -218,3 +325,54 @@ def make_bucketed_prefill(cfg: ModelConfig, cache_dtype=jnp.float32):
         return logits, new_cache
 
     return _prefill
+
+
+@functools.lru_cache(maxsize=None)
+def make_paged_prefill(cfg: ModelConfig):
+    """Returns suffix_prefill(params, arena_slice, tokens [1,T], start [1],
+    valid [1]) -> (full_logits [1,T,V], arena_slice).
+
+    Prefills an uncached prompt *suffix* directly against the paged arena:
+    queries run at absolute positions ``start + t`` and attend the slot's
+    whole block table, so cached prefix pages adopted by the prefix cache
+    are visible without any contiguous round-trip. ``valid`` is the
+    absolute position bound start + true_suffix_len: reads past it are
+    masked and writes of right-padding bucket garbage are routed to the
+    null page. ``arena_slice`` is the arena with ``block_tbl`` narrowed to
+    the one admitting slot (batch 1). Compiles once per suffix bucket T."""
+    from repro.models.model import forward
+
+    @jax.jit
+    def _suffix_prefill(params, arena, tokens, start, valid):
+        t = tokens.shape[1]
+        positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        logits, new_arena, _ = forward(cfg, params, tokens,
+                                       positions=positions, cache=arena,
+                                       valid_len=valid)
+        return logits, new_arena
+
+    return _suffix_prefill
+
+
+@functools.lru_cache(maxsize=None)
+def make_page_copy(cfg: ModelConfig):
+    """jit'd (arena, src, dst) -> arena with page dst a copy of page src
+    in every attention leaf of every group — the device half of
+    :meth:`PagedKVPool.cow` (the host half swaps the block-table entry)."""
+
+    @jax.jit
+    def _copy(arena, src, dst):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                for name, leaf in attn.items():
+                    if name.endswith("_pages"):
+                        attn[name] = leaf.at[:, dst].set(leaf[:, src])
+                grp["attn"] = attn
+            out[key] = grp
+        return out
+
+    return _copy

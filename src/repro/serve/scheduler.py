@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Optional
+from typing import Deque, List, Optional
 
 from repro.serve.paged_kv import pages_for
 
@@ -45,11 +45,35 @@ class SchedulerConfig:
     max_len: int = 256                # per-sequence logical capacity
 
 
-class FifoScheduler:
-    """FIFO queue + per-round prefill token budget + preemption policy."""
+@dataclasses.dataclass
+class Admission:
+    """One admitted request plus its prefix-cache split.
 
-    def __init__(self, cfg: SchedulerConfig):
+    ``cached_pages`` alias the index's pages for the first ``cached_len``
+    prompt tokens (whole pages; empty on a miss). ``suffix_start`` is where
+    prefill must actually run from — ``cached_len``, except for a
+    whole-prompt hit where it is ``len(prompt) - 1`` so the final token's
+    logit is recomputed (its KV write COWs the shared page it lands in)."""
+    req: object
+    cached_pages: List[int] = dataclasses.field(default_factory=list)
+    cached_len: int = 0
+
+    @property
+    def suffix_start(self) -> int:
+        return min(self.cached_len, len(self.req.prompt) - 1)
+
+
+class FifoScheduler:
+    """FIFO queue + per-round prefill token budget + preemption policy.
+
+    With a ``prefix_cache``, admission matches the head request's prompt
+    against the radix index and hands the engine an :class:`Admission`
+    split — the prefill token budget and the pool-capacity check are then
+    charged only for the uncached suffix (still pow2-bucketed)."""
+
+    def __init__(self, cfg: SchedulerConfig, prefix_cache=None):
         self.cfg = cfg
+        self.prefix_cache = prefix_cache
         self.queue: Deque = deque()
         self._admit_seq = 0           # monotonically increasing admit stamp
         self.admitted_at: dict = {}   # slot -> admit stamp
@@ -72,24 +96,37 @@ class FifoScheduler:
         self._round_budget = self.cfg.max_prefill_tokens
         self._round_first = True
 
-    def next_admission(self, free_pages: int) -> Optional[object]:
+    def next_admission(self, free_pages: int) -> Optional[Admission]:
         """Pop the queue head if this round's budget and the pool allow it.
 
-        Returns the request, or None (empty queue / budget spent / pool
-        cannot hold the prompt right now). The first admission of a round
+        Returns an :class:`Admission` (request + prefix-cache split), or
+        None (empty queue / budget spent / pool cannot hold the prompt
+        right now). ``free_pages`` may include pages the engine can evict
+        from the prefix cache on demand. The first admission of a round
         ignores the token budget — the budget throttles prefill *bursts*,
         it must never deadlock a long prompt."""
         if not self.queue:
             return None
         req = self.queue[0]
-        padded = bucket_len(len(req.prompt), self.cfg.page)
+        adm = Admission(req)
+        if self.prefix_cache is not None:
+            adm.cached_pages, adm.cached_len = \
+                self.prefix_cache.match(req.prompt)
+        padded = bucket_len(len(req.prompt) - adm.suffix_start,
+                            self.cfg.page)
         if not self._round_first and padded > self._round_budget:
             return None
-        if pages_for(len(req.prompt), self.cfg.page) > free_pages:
+        # fresh pages to cover the prompt beyond the adopted prefix, plus
+        # one for the COW of a whole-prompt hit's recomputed final token
+        need = (pages_for(len(req.prompt), self.cfg.page)
+                - len(adm.cached_pages)
+                + (1 if adm.cached_len >= len(req.prompt) else 0))
+        if need > free_pages:
             return None
         self._round_budget -= padded
         self._round_first = False
-        return self.queue.popleft()
+        self.queue.popleft()
+        return adm
 
     def on_admit(self, slot: int) -> None:
         self.admitted_at[slot] = self._admit_seq
@@ -106,7 +143,12 @@ class FifoScheduler:
         ping-pong, erasing each other's progress forever. With this order
         the oldest admitted slot is never preempted, so it always runs to
         completion and frees its pages: global progress is guaranteed.
-        A requester with no younger victim preempts *itself* and waits."""
+        A requester with no younger victim preempts *itself* and waits.
+
+        The max over (stamp, slot) tuples is a deterministic total order:
+        equal stamps (possible when admission records are restored or
+        injected out of band) fall through to the higher slot id, never to
+        dict iteration order. Pinned by a regression test."""
         stamp_r = self.admitted_at[requester]
         candidates = [(stamp, slot) for slot, stamp in
                       self.admitted_at.items() if stamp > stamp_r]

@@ -1,0 +1,386 @@
+"""Prefix-cache subsystem: radix match/insert/evict mechanics, refcounted
+COW page sharing in the pool, engine parity with caching on vs off (fp32
+and int8 KV), eviction-under-pressure vs preemption, streaming callbacks,
+scheduler tie-breaking, and the memsys prefix-traffic DSE hook."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_kv import PageAccountingError, PagedKVPool
+from repro.serve.prefix_cache import PrefixCache
+from repro.serve.scheduler import FifoScheduler, SchedulerConfig
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=64)
+CFG = ModelConfig(name="t", family="dense", **BASE)
+CFG_INT8 = ModelConfig(name="t8", family="dense", kv_cache_quant=True,
+                       **BASE)
+CFG_HYBRID = ModelConfig(name="th", family="hybrid", pattern=("hybrid",),
+                         d_state=16, ssm_headdim=32, **BASE)
+
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def params_int8():
+    return init_params(CFG_INT8, jax.random.PRNGKey(0))
+
+
+def _pool(n_pages=16, max_slots=4, max_pages=8):
+    return PagedKVPool(CFG, n_pages=n_pages, page=PAGE, max_slots=max_slots,
+                       max_pages_per_seq=max_pages)
+
+
+def _prompt(rng, n):
+    return rng.integers(2, CFG.vocab, n).astype(np.int32)
+
+
+def _tenant_requests(n=6, sys_len=24, user_lo=4, user_hi=12, max_new=5,
+                     seed=3):
+    """Shared system prompt + unique user suffix per request."""
+    rng = np.random.default_rng(seed)
+    sys_prompt = _prompt(rng, sys_len)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt, _prompt(rng, int(u))]).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, u in enumerate(rng.integers(user_lo, user_hi, size=n))]
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+def _run_pair(cfg, p, reqs, **kw):
+    """Same workload with caching off and on; returns (off, on, engine)."""
+    off = _clone(reqs)
+    ServeEngine(cfg, p, page_size=PAGE, **kw).run(off)
+    on = _clone(reqs)
+    eng = ServeEngine(cfg, p, page_size=PAGE, prefix_cache=True, **kw)
+    eng.run(on)
+    return off, on, eng
+
+
+# -------------------------------------------------------------------------
+# radix index mechanics (no engine, host-side only)
+# -------------------------------------------------------------------------
+def test_radix_hit_miss_partial():
+    pool = _pool()
+    cache = PrefixCache(pool)
+    rng = np.random.default_rng(0)
+    prompt = _prompt(rng, 3 * PAGE + 3)
+
+    assert cache.match(prompt) == ([], 0)            # cold miss
+    pages = pool.ensure(0, len(prompt))
+    cache.insert(prompt, pages[:3])                  # 3 full pages cached
+    assert len(cache) == 3
+
+    got, n = cache.match(prompt)                     # full hit
+    assert n == 3 * PAGE and got == pages[:3]
+    # partial: same first page, divergent second
+    other = prompt.copy()
+    other[PAGE + 1] ^= 1
+    got, n = cache.match(other)
+    assert n == PAGE and got == pages[:1]
+    # miss: diverges inside page 0
+    third = prompt.copy()
+    third[0] ^= 1
+    assert cache.match(third) == ([], 0)
+    # prompts shorter than a page can never match
+    assert cache.match(prompt[:PAGE - 1]) == ([], 0)
+
+
+def test_radix_match_covers_whole_prompt_only_in_full_pages():
+    pool = _pool()
+    cache = PrefixCache(pool)
+    prompt = np.arange(2, 2 + 2 * PAGE, dtype=np.int32)   # page-aligned
+    cache.insert(prompt, pool.ensure(0, len(prompt)))
+    got, n = cache.match(prompt)
+    assert n == len(prompt) and len(got) == 2        # engine COWs last page
+    got, n = cache.match(prompt[:2 * PAGE - 1])
+    assert n == PAGE and len(got) == 1
+
+
+def test_radix_insert_existing_block_keeps_first_page():
+    pool = _pool()
+    cache = PrefixCache(pool)
+    prompt = np.arange(2, 2 + PAGE, dtype=np.int32)
+    first = pool.ensure(0, PAGE)
+    cache.insert(prompt, first)
+    dup = pool.ensure(1, PAGE)                       # concurrent duplicate
+    assert cache.insert(prompt, dup) == 0
+    assert cache.match(prompt.tolist() + [9])[0] == first
+    assert pool.ref[dup[0]] == 1                     # newcomer stays private
+
+
+def test_radix_lru_leaf_first_eviction():
+    pool = _pool()
+    cache = PrefixCache(pool)
+    a = np.arange(0, 3 * PAGE, dtype=np.int32) % 60 + 2
+    b = a.copy()
+    b[2 * PAGE] ^= 1                                 # shares 2 pages with a
+    pa = pool.ensure(0, len(a))
+    cache.insert(a, pa)
+    _, na = cache.match(a)
+    pb_own = pool.ensure(1, PAGE)                    # b's divergent page 2
+    cache.insert(b, pa[:2] + pb_own)
+    pool.free_slot(0)
+    pool.free_slot(1)
+    assert cache.evictable_pages() == 4
+    # a's leaf is older than b's leaf -> evicted first
+    freed = cache.evict(1)
+    assert freed == 1
+    assert cache.match(a)[1] == 2 * PAGE             # interior pages intact
+    assert cache.match(b)[1] == 3 * PAGE
+    # evicting everything walks leaves upward until the tree is empty
+    assert cache.evict(100) == 3
+    assert len(cache) == 0 and pool.free_count == pool.n_pages
+
+
+def test_radix_pinned_pages_not_evictable():
+    pool = _pool()
+    cache = PrefixCache(pool)
+    prompt = np.arange(2, 2 + 2 * PAGE, dtype=np.int32)
+    pages = pool.ensure(0, len(prompt))
+    cache.insert(prompt, pages)
+    assert cache.evictable_pages() == 0              # slot 0 still maps them
+    assert cache.evict(5) == 0
+    pool.free_slot(0)
+    assert cache.evictable_pages() == 2
+    got, _ = cache.match(prompt)
+    pool.adopt(1, got)                               # adoption re-pins
+    assert cache.evictable_pages() == 0 and cache.evict(5) == 0
+    assert pool.pinned_count == 2 and pool.cached_only_count == 0
+
+
+# -------------------------------------------------------------------------
+# pool hardening: refcounts, COW, loud free-list failures
+# -------------------------------------------------------------------------
+def test_pool_release_refcounts_and_double_free():
+    pool = _pool()
+    (pid,) = pool.ensure(0, 4)
+    pool.retain(pid)                                 # cache-style second ref
+    assert pool.release(pid) is False                # still cache-held
+    assert pool.release(pid) is True                 # now recycled
+    with pytest.raises(PageAccountingError):
+        pool.release(pid)                            # double free is loud
+    with pytest.raises(PageAccountingError):
+        pool.retain(pid)                             # retain of a free page
+
+
+def test_pool_free_slot_spares_cached_pages():
+    pool = _pool()
+    pages = pool.ensure(0, 2 * PAGE)
+    for pid in pages:
+        pool.retain(pid)
+    assert pool.free_slot(0) == 0                    # cache refs keep both
+    assert pool.free_count == pool.n_pages - 2
+    for pid in pages:
+        assert pool.release(pid)
+    assert pool.free_count == pool.n_pages
+
+
+def test_pool_adopt_requires_live_pages_and_empty_slot():
+    pool = _pool()
+    pages = pool.ensure(0, PAGE)
+    pool.adopt(1, pages)
+    assert pool.ref[pages[0]] == 2
+    with pytest.raises(PageAccountingError):
+        pool.adopt(1, pages)                         # non-empty slot
+    free_pid = pool.free[0]
+    with pytest.raises(PageAccountingError):
+        pool.adopt(2, [free_pid])                    # unallocated page
+
+
+def test_pool_cow_semantics():
+    pool = _pool(n_pages=3, max_slots=3, max_pages=2)
+    pages = pool.ensure(0, 2 * PAGE)
+    assert pool.cow(0, 0) is None                    # private: no copy
+    pool.adopt(1, pages)
+    src_dst = pool.cow(1, 0)                         # shared: privatize
+    assert src_dst == (pages[0], 3) or src_dst[0] == pages[0]
+    src, dst = src_dst
+    assert pool.slot_pages[1][0] == dst != src
+    assert pool.block_tables[1, 0] == dst
+    assert pool.ref[src] == 1 and pool.ref[dst] == 1
+    assert pool.cow_copies == 1
+    # second COW in the same pool: free list is now empty
+    pool.adopt(2, [pages[1]])
+    assert pool.cow(2, 0) is False                   # caller must evict
+
+
+# -------------------------------------------------------------------------
+# engine parity: cache on == cache off, token for token
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg_name", ["fp32", "int8"])
+def test_prefix_cache_parity_shared_prompt(cfg_name, params, params_int8):
+    cfg = CFG if cfg_name == "fp32" else CFG_INT8
+    p = params if cfg_name == "fp32" else params_int8
+    reqs = _tenant_requests(n=6, sys_len=24)
+    off, on, eng = _run_pair(cfg, p, reqs, slots=4, max_len=64)
+    assert [r.out_tokens for r in off] == [r.out_tokens for r in on]
+    assert all(r.done for r in on)
+    s = eng.stats
+    assert s.cache_hits >= 5                         # every follower hits
+    assert s.cache_hit_tokens >= 5 * 24
+    assert s.prefill_tokens < s.prompt_tokens
+    assert s.prefill_token_reduction >= 0.5
+
+
+@pytest.mark.parametrize("cfg_name", ["fp32", "int8"])
+def test_prefix_cache_cow_divergence_after_shared_prefix(cfg_name, params,
+                                                        params_int8):
+    """Identical page-aligned prompts: followers adopt EVERY page and COW
+    the one the recomputed final token lands in; divergent generations
+    after the shared prefix never corrupt each other."""
+    cfg = CFG if cfg_name == "fp32" else CFG_INT8
+    p = params if cfg_name == "fp32" else params_int8
+    rng = np.random.default_rng(7)
+    prompt = _prompt(rng, 2 * PAGE)                  # aligned whole prompt
+    reqs = [Request(uid=i, prompt=prompt.copy(), max_new_tokens=6)
+            for i in range(3)]
+    off, on, eng = _run_pair(cfg, p, reqs, slots=4, max_len=64)
+    assert [r.out_tokens for r in off] == [r.out_tokens for r in on]
+    assert eng.stats.cow_copies == 2                 # one per follower
+    assert eng.stats.cache_hits == 2
+    # identical prompts under greedy decode produce identical outputs
+    assert on[0].out_tokens == on[1].out_tokens == on[2].out_tokens
+
+
+def test_prefix_cache_persists_across_runs(params):
+    reqs = _tenant_requests(n=4, sys_len=24)
+    eng = ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE,
+                      prefix_cache=True)
+    eng.run(_clone(reqs))
+    first = eng.stats.cache_hits
+    out2 = eng.run(_clone(reqs))
+    assert eng.stats.cache_hits == len(reqs) > first  # run 2: all hit
+    off = _clone(reqs)
+    ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE).run(off)
+    assert [r.out_tokens for r in off] == [r.out_tokens for r in out2]
+
+
+def test_prefix_cache_rejects_recurrent_stacks(params):
+    with pytest.raises(NotImplementedError):
+        ServeEngine(CFG_HYBRID, init_params(CFG_HYBRID,
+                                            jax.random.PRNGKey(0)),
+                    prefix_cache=True)
+
+
+# -------------------------------------------------------------------------
+# eviction under pressure + preemption interplay
+# -------------------------------------------------------------------------
+def test_eviction_under_pressure_with_preemption(params):
+    """A pool too small to keep every published page forces LRU eviction
+    of cached pages (and possibly preemption); outputs stay identical to
+    the cache-off engine and nothing deadlocks."""
+    reqs = _tenant_requests(n=8, sys_len=16, user_lo=6, user_hi=12,
+                            max_new=10, seed=9)
+    off, on, eng = _run_pair(CFG, params, reqs, slots=2, max_len=48,
+                             n_pages=10)
+    assert all(r.done for r in on)
+    assert [r.out_tokens for r in off] == [r.out_tokens for r in on]
+    s = eng.stats
+    assert s.cache_hits >= 1
+    assert s.cache_evictions >= 1                    # pressure really bit
+    pool = eng._pool
+    # no leaks: at rest only index-held pages remain allocated
+    assert pool.pinned_count == 0
+    assert pool.used_count == eng.prefix_cache.cached_pages()
+
+
+# -------------------------------------------------------------------------
+# streaming callback (satellite)
+# -------------------------------------------------------------------------
+def test_streaming_tokens_match_final_outputs(params):
+    reqs = _tenant_requests(n=6, sys_len=24)
+    streams = {}
+    eng = ServeEngine(CFG, params, slots=3, max_len=64, page_size=PAGE,
+                      prefix_cache=True)
+    out = eng.run(_clone(reqs), on_token=lambda s, tok, req:
+                  streams.setdefault(req.uid, []).append((s, tok)))
+    for r in out:
+        assert [t for _, t in streams[r.uid]] == r.out_tokens
+    # every request's decode tokens came from one stable slot
+    for r in out:
+        slots = {s for s, _ in streams[r.uid]}
+        assert len(slots) == 1
+
+
+def test_streaming_eos_at_prefill_reports_no_slot(params):
+    probe = Request(uid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                    max_new_tokens=4)
+    ServeEngine(CFG, params, slots=2, max_len=32,
+                page_size=PAGE).run([probe])
+    first = probe.out_tokens[0]
+    seen = []
+    req = Request(uid=1, prompt=np.arange(2, 12, dtype=np.int32),
+                  max_new_tokens=4, eos_id=first)
+    ServeEngine(CFG, params, slots=2, max_len=32, page_size=PAGE).run(
+        [req], on_token=lambda s, tok, r: seen.append((s, tok)))
+    assert seen == [(-1, first)]
+
+
+# -------------------------------------------------------------------------
+# scheduler: deterministic preemption order (satellite regression)
+# -------------------------------------------------------------------------
+def test_choose_victim_breaks_stamp_ties_by_slot_id():
+    for order in ([1, 2, 3], [3, 2, 1], [2, 3, 1]):
+        sched = FifoScheduler(SchedulerConfig())
+        sched.admitted_at = {0: 5}
+        for slot in order:
+            sched.admitted_at[slot] = 7              # forged equal stamps
+        assert sched.choose_victim(0) == 3           # (stamp, slot) max
+    sched = FifoScheduler(SchedulerConfig())
+    sched.admitted_at = {0: 5, 1: 9, 2: 7}
+    assert sched.choose_victim(0) == 1               # stamp still dominates
+    assert sched.choose_victim(1) is None            # no younger slot
+
+
+# -------------------------------------------------------------------------
+# memsys DSE hook: prefill-write credit for cache hits
+# -------------------------------------------------------------------------
+def test_kv_traffic_prefix_accounting():
+    from repro.memsys.workload import (kv_bits_per_step, kv_traffic_paged,
+                                       kv_traffic_prefix, make_traffic)
+    page = 16
+    per_tok = (kv_bits_per_step(CFG, 1) - kv_bits_per_step(CFG, 0))
+    lens, cached = [40, 40, 24], [0, 32, 16]
+    t = kv_traffic_prefix(CFG, lens, cached, page=page)
+    # page-rounded prefill writes, minus the cached tokens
+    assert t.prefill_write_bits_nocache == pytest.approx(
+        per_tok * (48 + 48 + 32))
+    assert t.prefill_write_bits == pytest.approx(
+        per_tok * (48 + 16 + 16))
+    assert t.saved_prefill_write_bits == pytest.approx(per_tok * 48)
+    assert t.hit_rate == pytest.approx(48 / 104)
+    # residency dedups the shared prefix (unique_cached defaults to max)
+    assert t.n_pages_nocache == 3 + 3 + 2
+    assert t.n_pages == (3 - 0) + (3 - 2) + (2 - 1) + 2
+    assert t.resident_bits == pytest.approx(t.n_pages * per_tok * page)
+    # decode reads are the plain paged stream
+    paged = kv_traffic_paged(CFG, lens, page=page)
+    assert t.kv_bits_per_step == pytest.approx(paged.kv_bits_per_step)
+    # Eq.(3)/(4) rebinding, with and without prefill amortization
+    base = make_traffic(CFG, "qmc", seq_len=2048)
+    assert t.apply(base).kv_bits == pytest.approx(t.kv_bits_per_step)
+    amort = t.apply(base, amortize_tokens=64)
+    assert amort.kv_bits == pytest.approx(
+        t.kv_bits_per_step + t.prefill_write_bits / (3 * 64))
+    with pytest.raises(ValueError):
+        kv_traffic_prefix(CFG, [16], [9], page=page)  # partial-page cached
+
+
+# refcount-invariant property tests live in
+# tests/test_prefix_cache_properties.py (whole-module hypothesis guard,
+# matching test_quantizers.py idiom)

@@ -1,0 +1,75 @@
+"""Refcount invariants of the prefix cache + paged pool under random op
+sequences (property-based; see test_prefix_cache.py for example-based
+coverage of the same subsystem)."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serve.paged_kv import PagedKVPool  # noqa: E402
+from repro.serve.prefix_cache import PrefixCache  # noqa: E402
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=64)
+
+
+def _check_accounting(pool, cache):
+    counts = np.zeros_like(pool.ref)
+    for pages in pool.slot_pages:
+        for pid in pages:
+            counts[pid] += 1
+    for pid in cache._nodes:
+        counts[pid] += 1
+    assert (counts[1:] == pool.ref[1:]).all()
+    assert all(pool.ref[pid] == 0 for pid in pool.free)
+    assert len(pool.free) == len(pool._free_set)
+    assert pool.used_count == int((counts[1:] > 0).sum())
+    cache.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_refcount_invariants_random_ops(data):
+    """Mini-engine: random admit/finish/evict sequences (with COW on
+    whole-prompt hits) keep the pool+index accounting exact — every
+    refcount equals its table and index reference population, the free
+    list holds exactly the ref-0 pages, and the radix tree never
+    dangles."""
+    page, slots = 4, 3
+    pool = PagedKVPool(CFG, n_pages=10, page=page, max_slots=slots,
+                       max_pages_per_seq=4)
+    cache = PrefixCache(pool)
+    live = {}                                        # slot -> prompt
+
+    for _ in range(data.draw(st.integers(5, 30), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "finish", "evict"]), label="op")
+        if op == "admit" and len(live) < slots:
+            slot = next(s for s in range(slots) if s not in live)
+            n = data.draw(st.integers(2, 16), label="len")
+            prompt = np.array(
+                data.draw(st.lists(st.integers(2, 5), min_size=n,
+                                   max_size=n), label="prompt"),
+                np.int32)
+            pages, c = cache.match(prompt)
+            start = min(c, len(prompt) - 1)
+            pool.adopt(slot, pages)
+            if pool.ensure(slot, len(prompt)) is None or (
+                    c >= len(prompt)
+                    and pool.cow(slot, start) is False):
+                pool.free_slot(slot)                 # admission aborted
+            else:
+                n_full = len(prompt) // page
+                cache.insert(prompt, pool.slot_pages[slot][:n_full])
+                live[slot] = prompt
+        elif op == "finish" and live:
+            slot = data.draw(st.sampled_from(sorted(live)), label="slot")
+            pool.free_slot(slot)
+            del live[slot]
+        elif op == "evict":
+            cache.evict(data.draw(st.integers(1, 4), label="n"))
+        _check_accounting(pool, cache)
