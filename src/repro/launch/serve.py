@@ -4,6 +4,14 @@ them with QMC, and serves batched requests through the engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --reduced --requests 8 --new-tokens 16 --weights qmc
+
+Sharded serving drives the SAME step-builder layer (``serve/steps.py``)
+the engine uses everywhere: ``--data-shards D --model-shards M`` builds a
+(D, M) ``("data", "model")`` mesh, quantizes the weights per TP shard
+(``tp_shards=M`` — the QMC quantize-after-shard deployment format), builds
+the paged step set explicitly, and hands it to ``ServeEngine``. Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to demo on a CPU
+host.
 """
 from __future__ import annotations
 
@@ -16,8 +24,11 @@ import numpy as np
 from repro.configs import get_config, reduced_config
 from repro.core.qconfig import QMCConfig
 from repro.core.serving_quant import quantize_for_serving
+from repro.launch import mesh as meshlib
 from repro.models.model import init_params
+from repro.serve import steps as serve_steps
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.paged_kv import pages_for
 
 
 def main():
@@ -36,6 +47,13 @@ def main():
     ap.add_argument("--sys-prompt-len", type=int, default=0,
                     help="prepend a shared system prompt of this length "
                          "to every request (multi-tenant demo)")
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="mesh 'data' axis: shards the paged arena's "
+                         "page pool")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="mesh 'model' axis: TP over heads / FFN / "
+                         "quantized weight shards")
+    ap.add_argument("--page-size", type=int, default=16)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(
@@ -45,8 +63,17 @@ def main():
         t0 = time.monotonic()
         params = quantize_for_serving(
             params, QMCConfig(rho=args.rho, granularity="subtile"),
-            tp_shards=1, min_dim=64)
-        print(f"[serve] QMC PTQ in {time.monotonic()-t0:.1f}s")
+            tp_shards=args.model_shards, min_dim=64)
+        print(f"[serve] QMC PTQ in {time.monotonic()-t0:.1f}s "
+              f"(tp_shards={args.model_shards})")
+
+    mesh = None
+    if args.data_shards * args.model_shards > 1:
+        mesh = meshlib.make_mesh((args.data_shards, args.model_shards),
+                                 ("data", "model"))
+        print(f"[serve] mesh data={args.data_shards} "
+              f"model={args.model_shards} over "
+              f"{args.data_shards * args.model_shards} devices")
 
     rng = np.random.default_rng(args.seed)
     sys_prompt = rng.integers(2, cfg.vocab, size=args.sys_prompt_len)
@@ -57,9 +84,24 @@ def main():
                     ).astype(np.int32),
                     max_new_tokens=args.new_tokens)
             for i in range(args.requests)]
-    eng = ServeEngine(cfg, params, slots=args.slots,
-                      max_len=(args.sys_prompt_len + args.prompt_len
-                               + args.new_tokens + 4),
+
+    # build the step set through the shared builder layer (exactly what
+    # the engine would build itself — passing it in pins the contract)
+    max_len = (args.sys_prompt_len + args.prompt_len
+               + args.new_tokens + 4)
+    mpps = pages_for(max_len, args.page_size)
+    n_pages = serve_steps.default_n_pages(args.slots, mpps, mesh)
+    p_struct = None
+    if mesh is not None:
+        p_struct = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    step_set = serve_steps.build_paged_steps(
+        cfg, mesh, p_struct, page=args.page_size,
+        n_pages=n_pages, max_slots=args.slots,
+        max_pages_per_seq=mpps)
+    eng = ServeEngine(cfg, params, slots=args.slots, max_len=max_len,
+                      page_size=args.page_size, mesh=mesh,
+                      step_set=step_set,
                       prefix_cache=args.prefix_cache)
     eng.run(reqs)
     s = eng.stats
@@ -70,6 +112,9 @@ def main():
         print(f"[serve] prefix cache: {s.cache_hits} hits, "
               f"hit_rate={s.hit_rate:.2f}, prefill-token reduction="
               f"{s.prefill_token_reduction:.2f}, {s.cow_copies} COW copies")
+    if s.dedup_hits:
+        print(f"[serve] in-flight dedup: {s.dedup_hits} admissions "
+              f"aliased a live identical prompt")
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}...")
 

@@ -234,6 +234,59 @@ def cache_spec(path: str, leaf, mesh, global_batch: int) -> P:
     return P()
 
 
+def paged_cache_spec(path: str, leaf, mesh) -> P:
+    """Paged KV arena specs (``serve/paged_kv.py``). Leaves are stacked
+    with a leading n_groups dim.
+
+    Sharding contract (the serve step builders' "sharded arena"):
+
+      * ``k_pages``/``v_pages`` ``[G, n_pages, page, kv_dim]`` — the page
+        axis shards over **data** (each data shard owns a horizontal slice
+        of the pool; block tables address pages globally and GSPMD routes
+        the gather/scatter), the fused kv_dim over **model** (same flat
+        16-way trick as the contiguous cache — reshapeable into the
+        (KV x hd) sharding the attention einsums want).
+      * ``k_scale_pages``/``v_scale_pages`` ``[G, n_pages, page, KV]`` —
+        page axis on data; the per-head scale dim on model when the KV
+        head count divides.
+      * ``block_tbl`` ``[G, B, max_pages]`` — **replicated**: every shard
+        must resolve any logical position to a (possibly remote) page.
+      * mamba ``ssm``/``conv`` — dense per-slot; batch on dp when
+        divisible (matches ``cache_spec``).
+
+    Non-divisible dims replicate, as everywhere else in this module.
+    """
+    tp_n = meshlib.axis_size(mesh, "model")
+    data_n = meshlib.axis_size(mesh, "data")
+    shape = tuple(getattr(leaf, "shape", ()))
+
+    def div(dim, ax, n):
+        return ax if (n > 1 and dim % n == 0) else None
+
+    if path.endswith("_pages"):
+        g, n_pages, page, last = shape
+        return P(None, div(n_pages, "data", data_n), None,
+                 div(last, "model", tp_n))
+    if path.endswith("block_tbl"):
+        return P()
+    if path.endswith("/ssm") or path.endswith("/conv"):
+        dp = _dp_entry(mesh)
+        dp_n = meshlib.dp_size(mesh)
+        b = shape[1]
+        spec = [None] * len(shape)
+        spec[1] = div(b, dp, dp_n) if isinstance(dp, str) else None
+        return P(*spec)
+    return P()
+
+
+def shard_paged_cache_tree(arena, mesh):
+    """Tree of NamedShardings for a paged arena pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(arena)
+    out = [NamedSharding(mesh, paged_cache_spec(_path_str(p), l, mesh))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def shard_cache_tree(cache, mesh, global_batch: int):
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     out = [NamedSharding(mesh, cache_spec(_path_str(p), l, mesh,

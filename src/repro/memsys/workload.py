@@ -249,6 +249,57 @@ def kv_traffic_prefix(cfg: ModelConfig, prompt_lens, cached_lens,
         resident_bits_nocache=pages_nocache * kv_token_bits(page))
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedServeTraffic:
+    """Per-device traffic under the sharded serving step set.
+
+    The sharded paged engine (``serve/steps.py``) splits the byte streams
+    the Eq. (3)/(4) DSE charges:
+
+      * **weights** — TP over ``model``: every device streams only its
+        shard's quantized streams (``ShardedQTensor`` stacks are
+        quantize-after-shard, so shard streams are equal-sized by
+        construction); the ``data`` axis replicates weights at inference.
+      * **KV** — the arena's page axis shards over ``data`` and the fused
+        kv_dim over ``model``: a device streams its slice of each live
+        page, i.e. ``1/(data*model)`` of the batch KV stream.
+      * **activations** — batch shards over ``data`` (each device decodes
+        its slot slice); the hidden dim stays replicated.
+
+    ``apply`` rebinds a single-device :class:`Traffic` to the per-device
+    streams so the memory-system DSE scores ONE shard of the mesh — the
+    unit that actually owns an eMEM/LPDDR5 stack on a multi-device edge
+    board (SLIM-style heterogeneous partitioning)."""
+    data_shards: int = 1
+    model_shards: int = 1
+
+    @property
+    def n_devices(self) -> int:
+        return self.data_shards * self.model_shards
+
+    def apply(self, traffic: "Traffic") -> "Traffic":
+        d, m = self.data_shards, self.model_shards
+        return dataclasses.replace(
+            traffic,
+            name=f"{traffic.name}+shard_d{d}m{m}",
+            weight_bits_outlier=traffic.weight_bits_outlier / m,
+            weight_bits_inlier=traffic.weight_bits_inlier / m,
+            kv_bits=traffic.kv_bits / (d * m),
+            act_bits=traffic.act_bits / d,
+            weight_cells_inlier=traffic.weight_cells_inlier / m,
+            weight_cells_outlier=traffic.weight_cells_outlier / m,
+            dram_resident_bits=traffic.dram_resident_bits / m,
+            flash_resident_bits=traffic.flash_resident_bits / m)
+
+
+def shard_serve_traffic(traffic: Traffic, *, data_shards: int = 1,
+                        model_shards: int = 1) -> Traffic:
+    """One-shot convenience: per-device view of ``traffic`` on a
+    (data, model) serving mesh."""
+    return ShardedServeTraffic(data_shards=data_shards,
+                               model_shards=model_shards).apply(traffic)
+
+
 def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,
                  qmc: QMCConfig = QMCConfig(), mx: MXConfig = MXConfig(),
                  legacy_flash: bool = False) -> Traffic:

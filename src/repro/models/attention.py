@@ -12,7 +12,42 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import runtime_context as rctx
+from repro.launch.mesh import axis_size as _mesh_axis
 from repro.models.layers import apply_rotary, linear, rotary_cos_sin, softcap
+
+
+def _constrain_pages(x: jax.Array) -> jax.Array:
+    """Pin an arena page leaf [n_pages, page, last] to the serving
+    sharding contract (pages over ``data``, fused kv/scale dim over
+    ``model``) under the runtime mesh — keeps the scatter's output
+    sharded instead of letting GSPMD replicate the whole pool."""
+    mesh = rctx.current_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    d_n, m_n = _mesh_axis(mesh, "data"), _mesh_axis(mesh, "model")
+    p_ax = "data" if (d_n > 1 and x.shape[0] % d_n == 0) else None
+    k_ax = "model" if (m_n > 1 and x.shape[-1] % m_n == 0) else None
+    if p_ax is None and k_ax is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(p_ax, None, k_ax)))
+
+
+def _constrain_heads(x: jax.Array) -> jax.Array:
+    """Pin gathered K/V [B, T, KV, hd] to head sharding on ``model`` so
+    the attention einsums run TP-local after the cross-shard page
+    gather."""
+    mesh = rctx.current_mesh()
+    if mesh is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    m_n = _mesh_axis(mesh, "model")
+    if m_n <= 1 or x.shape[2] % m_n != 0:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, None, "model", None)))
 
 
 def _expand_gqa(q: jax.Array, n_kv: int) -> jax.Array:
@@ -260,20 +295,26 @@ def paged_cache_write(cache: dict, k: jax.Array, v: jax.Array,
         from repro.models.kvcache import quantize_kv
         kq, ks = quantize_kv(k)
         vq, vs = quantize_kv(v)
-        new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
-            kq.reshape(b, s, n_kv * hd))
-        new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
-            vq.reshape(b, s, n_kv * hd))
-        new["k_scale_pages"] = cache["k_scale_pages"].at[page_idx, off].set(
-            ks.reshape(b, s, n_kv))
-        new["v_scale_pages"] = cache["v_scale_pages"].at[page_idx, off].set(
-            vs.reshape(b, s, n_kv))
+        new["k_pages"] = _constrain_pages(
+            cache["k_pages"].at[page_idx, off].set(
+                kq.reshape(b, s, n_kv * hd)))
+        new["v_pages"] = _constrain_pages(
+            cache["v_pages"].at[page_idx, off].set(
+                vq.reshape(b, s, n_kv * hd)))
+        new["k_scale_pages"] = _constrain_pages(
+            cache["k_scale_pages"].at[page_idx, off].set(
+                ks.reshape(b, s, n_kv)))
+        new["v_scale_pages"] = _constrain_pages(
+            cache["v_scale_pages"].at[page_idx, off].set(
+                vs.reshape(b, s, n_kv)))
         return new
     dt = cache["k_pages"].dtype
-    new["k_pages"] = cache["k_pages"].at[page_idx, off].set(
-        k.astype(dt).reshape(b, s, n_kv * hd))
-    new["v_pages"] = cache["v_pages"].at[page_idx, off].set(
-        v.astype(dt).reshape(b, s, n_kv * hd))
+    new["k_pages"] = _constrain_pages(
+        cache["k_pages"].at[page_idx, off].set(
+            k.astype(dt).reshape(b, s, n_kv * hd)))
+    new["v_pages"] = _constrain_pages(
+        cache["v_pages"].at[page_idx, off].set(
+            v.astype(dt).reshape(b, s, n_kv * hd)))
     return new
 
 
@@ -296,7 +337,7 @@ def paged_cache_read(cache: dict, dtype, n_kv: int, hd: int):
         vs = cache["v_scale_pages"][tbl].reshape(b, p * page, n_kv)
         k = k.astype(dtype) * ks[..., None].astype(dtype)
         v = v.astype(dtype) * vs[..., None].astype(dtype)
-    return k, v
+    return _constrain_heads(k), _constrain_heads(v)
 
 
 def cross_attn_block(p: dict, x: jax.Array, enc_kv: dict, cfg, *,

@@ -20,7 +20,6 @@ exp(-1e30) = 0 to the softmax.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import List, Optional
 
@@ -29,10 +28,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.models.model import decode_step, prefill
-from repro.serve.paged_kv import (PagedKVPool, PoolExhausted, make_adopt,
-                                  make_bucketed_prefill, make_page_copy,
-                                  make_paged_prefill, pages_for)
+from repro.models.model import prefill
+from repro.serve import steps as serve_steps
+from repro.serve.paged_kv import PagedKVPool, PoolExhausted, pages_for
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (FifoScheduler, SchedulerConfig,
                                    bucket_len)
@@ -62,7 +60,9 @@ class EngineStats:
     prefill_tokens: int = 0          # tokens actually prefilled (suffixes)
     prefill_tokens_padded: int = 0   # same, after pow2 bucketing
     cache_hits: int = 0              # admissions served partly from cache
-    cache_hit_tokens: int = 0        # prompt tokens adopted from cache
+    cache_hit_tokens: int = 0        # prompt tokens adopted (cache+dedup)
+    dedup_hits: int = 0              # admissions aliasing an in-flight
+    #                                  identical prompt's live slot pages
     cow_copies: int = 0              # shared pages privatized on write
     cache_evictions: int = 0         # cached pages evicted under pressure
     # per decode call: wall seconds and tokens emitted by that call (the
@@ -90,14 +90,6 @@ class EngineStats:
     def per_token_latencies(self) -> List[float]:
         return [s / t for s, t in zip(self.step_seconds, self.step_tokens)
                 if t]
-
-
-@functools.lru_cache(maxsize=None)
-def _decode_jit(cfg: ModelConfig):
-    """One jitted decode per ModelConfig (hashable frozen dataclass):
-
-    engines sharing a config reuse XLA executables instead of re-tracing."""
-    return jax.jit(lambda p, t, c, pos: decode_step(cfg, p, t, c, pos))
 
 
 def _finished(req: Request, pos: int, max_len: int) -> bool:
@@ -130,46 +122,86 @@ class ServeEngine:
     ``run()`` calls so a shared system prompt is paid for once per server,
     not once per batch. Requires an attention-only stack — KV pages cannot
     snapshot SSM/conv recurrent state.
+
+    On attention-only stacks the scheduler also runs **in-flight dedup**
+    (a pending-prefill table): identical prompts admitted while an earlier
+    copy still occupies a slot alias that slot's full prompt pages instead
+    of prefilling them again — no radix index required.
+
+    ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
+    sharded: the arena's page axis over ``data``, attention heads / TP
+    weight dims (including ShardedQTensor stream stacks) over ``model``.
+    All step functions come from ``serve/steps.py`` — the same builder
+    layer ``launch/serve.py`` uses — either built here or passed in
+    prebuilt via ``step_set``.
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
                  max_len: int = 256, cache_dtype=jnp.float32,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  max_prefill_tokens: Optional[int] = None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, mesh=None,
+                 step_set: Optional[serve_steps.PagedServeSteps] = None,
+                 inflight_dedup: Optional[bool] = None):
         if cfg.is_encdec or cfg.n_vis_tokens:
             raise NotImplementedError(
                 "paged engine covers decoder-only models; use "
                 "LegacyServeEngine for encdec/vlm")
-        if prefix_cache and not all(k.startswith("attn")
-                                    for k in cfg.pattern):
+        attn_only = all(k.startswith("attn") for k in cfg.pattern)
+        if (prefix_cache or inflight_dedup) and not attn_only:
             raise NotImplementedError(
-                "prefix caching shares attention KV pages; SSM/conv state "
-                "is not page-addressable — disable it for hybrid/mamba "
-                f"stacks (pattern={cfg.pattern})")
+                "prefix caching / in-flight dedup share attention KV "
+                "pages; SSM/conv state is not page-addressable — disable "
+                f"them for hybrid/mamba stacks (pattern={cfg.pattern})")
         self.cfg = cfg
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.launch import sharding as shd
+            params = jax.device_put(params,
+                                    shd.shard_params_tree(params, mesh))
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.page = page_size
         self.max_pages_per_seq = pages_for(max_len, page_size)
-        self.n_pages = n_pages or slots * self.max_pages_per_seq
+        self.n_pages = n_pages or serve_steps.default_n_pages(
+            slots, self.max_pages_per_seq, mesh)
         self.max_prefill_tokens = (max_prefill_tokens
                                    or max(512, bucket_len(max_len,
                                                           page_size)))
         self.stats = EngineStats()
-        self._decode = _decode_jit(cfg)
-        self._prefill = make_bucketed_prefill(cfg, cache_dtype)
-        self._adopt = make_adopt(cfg, page_size)
-        self._suffix_prefill = make_paged_prefill(cfg)
-        self._page_copy = make_page_copy(cfg)
+        self._dedup = attn_only if inflight_dedup is None \
+            else inflight_dedup
+        if step_set is not None:
+            if step_set.cfg != cfg or step_set.mesh != mesh or \
+                    not step_set.compatible_with(
+                        page=self.page, n_pages=self.n_pages,
+                        max_slots=slots,
+                        max_pages_per_seq=self.max_pages_per_seq,
+                        cache_dtype=cache_dtype):
+                raise ValueError(
+                    "step_set was built for a different engine geometry "
+                    "(cfg/mesh/page/n_pages/slots/cache_dtype must match)")
+        self._steps = step_set
         # pool + arena (+ prefix index) persist across run() calls so
         # cached pages survive between batches, server-style
         self._use_prefix = prefix_cache
         self._pool: Optional[PagedKVPool] = None
         self._arena = None
         self.prefix_cache: Optional[PrefixCache] = None
+
+    def _build_steps(self) -> serve_steps.PagedServeSteps:
+        p_struct = None
+        if self.mesh is not None:
+            p_struct = jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                self.params)
+        return serve_steps.build_paged_steps(
+            self.cfg, self.mesh, p_struct, page=self.page,
+            n_pages=self.n_pages, max_slots=self.slots,
+            max_pages_per_seq=self.max_pages_per_seq,
+            cache_dtype=self.cache_dtype)
 
     def _ensure_pool(self) -> PagedKVPool:
         if self._pool is None:
@@ -179,6 +211,13 @@ class ServeEngine:
                 max_pages_per_seq=self.max_pages_per_seq,
                 cache_dtype=self.cache_dtype)
             self._arena = self._pool.init_arena()
+            if self._steps is None:
+                self._steps = self._build_steps()
+            if self.mesh is not None:
+                from repro.launch import sharding as shd
+                self._arena = jax.device_put(
+                    self._arena,
+                    shd.shard_paged_cache_tree(self._arena, self.mesh))
             if self._use_prefix:
                 self.prefix_cache = PrefixCache(self._pool)
         return self._pool
@@ -228,7 +267,8 @@ class ServeEngine:
         cache = self.prefix_cache
         sched = FifoScheduler(SchedulerConfig(
             page=self.page, max_prefill_tokens=self.max_prefill_tokens,
-            max_len=self.max_len), prefix_cache=cache)
+            max_len=self.max_len), prefix_cache=cache,
+            pool=pool if self._dedup else None)
         for r in requests:
             sched.enqueue(r)
 
@@ -299,9 +339,10 @@ class ServeEngine:
             emit(-1, tok, req)
 
         def admit_hit(adm, s: int) -> bool:
-            """Cache-hit admission: adopt shared pages, COW if the
-            recomputed final token lands in one, prefill the suffix
-            against the paged arena. Returns False if pages ran out."""
+            """Hit admission (radix match or in-flight dedup): adopt the
+            shared pages, COW if the recomputed final token lands in one,
+            prefill the suffix against the paged arena. Returns False if
+            pages ran out."""
             req = adm.req
             L = len(req.prompt)
             start = adm.suffix_start
@@ -311,20 +352,23 @@ class ServeEngine:
                 return False
             cow = pool.cow(s, start)
             while cow is False:
-                if not cache.evict(1):
+                if cache is None or not cache.evict(1):
                     pool.free_slot(s)
                     return False
                 self.stats.cache_evictions += 1
                 cow = pool.cow(s, start)
             if cow is not None:
-                self._arena = self._page_copy(self._arena, *cow)
+                self._arena = self._steps.page_copy(self._arena, *cow)
             toks, last = pad_bucket(req.prompt[start:])
             slot_cache = pool.install_tables(self._arena, slot=s)
-            logits, self._arena = self._suffix_prefill(
+            logits, self._arena = self._steps.suffix_prefill(
                 self.params, slot_cache, jnp.asarray(toks),
                 jnp.asarray([start], jnp.int32),
                 jnp.asarray([L], jnp.int32))
-            self.stats.cache_hits += 1
+            if adm.dedup:
+                self.stats.dedup_hits += 1
+            else:
+                self.stats.cache_hits += 1
             self.stats.cache_hit_tokens += start
             publish(req, s)
             tok = int(jnp.argmax(logits[0, last]))
@@ -336,11 +380,12 @@ class ServeEngine:
 
         def admit_miss(adm, s: int) -> bool:
             """Contiguous bucketed prefill + page adoption (original
-            path); publishes the finished pages to the index."""
+            path); publishes the finished pages to the index and the
+            scheduler's pending-prefill table."""
             req = adm.req
             L = len(req.prompt)
             toks, last = pad_bucket(req.prompt)
-            logits, contig = self._prefill(
+            logits, contig = self._steps.prefill(
                 self.params, jnp.asarray(toks),
                 jnp.asarray([L], jnp.int32))
             tok = int(jnp.argmax(logits[0, last]))
@@ -348,15 +393,23 @@ class ServeEngine:
                 retire(req, s, tok)  # e.g. prefill emitted EOS: no pages
                 return True          # were allocated, contig KV dropped
             if self._alloc(s, L) is None:
-                req.out_tokens = []  # undo record(); re-prefill later
+                # undo record() AND pad_bucket(): the attempt is requeued
+                # and will re-charge in full on retry — leaving these in
+                # would double-count prefill_tokens against the
+                # once-per-success prompt_tokens in the derived ratios
+                req.out_tokens = []
                 self.stats.tokens_out -= 1
+                self.stats.prefills -= 1
+                self.stats.prefill_tokens -= L
+                self.stats.prefill_tokens_padded -= toks.shape[1]
                 return False
             ids = list(pool.slot_pages[s])
             ids += [0] * (toks.shape[1] // self.page - len(ids))
-            self._arena = self._adopt(self._arena, contig,
-                                      jnp.asarray(ids, jnp.int32), s)
+            self._arena = self._steps.adopt(self._arena, contig,
+                                            jnp.asarray(ids, jnp.int32), s)
             publish(req, s)
             seat(req, s, tok)
+            sched.note_prefill(req, s)
             return True
 
         def admit() -> None:
@@ -369,7 +422,6 @@ class ServeEngine:
                 adm = sched.next_admission(capacity)
                 if adm is None:
                     break
-                self.stats.prompt_tokens += len(adm.req.prompt)
                 s = free_slots[0]
                 ok = (admit_hit(adm, s) if adm.cached_pages
                       else admit_miss(adm, s))
@@ -381,6 +433,10 @@ class ServeEngine:
                 if not ok:          # promised pages vanished; retry later
                     sched.requeue_front(adm.req)
                     break
+                # charged only on success: a requeued admission would
+                # otherwise double-count its prompt in hit_rate /
+                # prefill_token_reduction when retried
+                self.stats.prompt_tokens += len(adm.req.prompt)
                 if active[s] is adm.req:
                     free_slots.pop(0)
 
@@ -418,8 +474,8 @@ class ServeEngine:
             cache_in = pool.install_tables(self._arena)
             toks = jnp.asarray(next_tok[:, None].astype(np.int32))
             posv = jnp.asarray(pos.astype(np.int32))
-            logits, self._arena = self._decode(self.params, toks, cache_in,
-                                               posv)
+            logits, self._arena = self._steps.decode(self.params, toks,
+                                                     cache_in, posv)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
             self.stats.decode_steps += 1
 
@@ -464,7 +520,7 @@ class LegacyServeEngine:
         self.max_len = max_len
         self.cache_dtype = cache_dtype
         self.stats = EngineStats()
-        self._decode = _decode_jit(cfg)
+        self._decode = serve_steps.contiguous_decode(cfg)
 
     def _prefill_one(self, prompt: np.ndarray):
         tokens = jnp.asarray(prompt)[None, :]

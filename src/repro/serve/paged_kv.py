@@ -39,9 +39,8 @@ still-referenced pages raise instead of silently corrupting the arena.
 """
 from __future__ import annotations
 
-import functools
 from collections import deque
-from typing import List, Optional, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -88,8 +87,7 @@ class PagedKVPool:
                                      np.int32)
         self.pages_peak = 0
         self.cow_copies = 0
-        self._tbl_dirty = True
-        self._tbl_dev = None
+        self._tbl_cache = None       # (key, device array) — see below
 
     # ---- allocation ----------------------------------------------------
     @property
@@ -168,7 +166,6 @@ class PagedKVPool:
         for j, pid in enumerate(fresh, start=have):
             self.slot_pages[slot].append(pid)
             self.block_tables[slot, j] = pid
-        self._tbl_dirty = True
         self.pages_peak = max(self.pages_peak, self.used_count)
         return fresh
 
@@ -184,7 +181,6 @@ class PagedKVPool:
             self.retain(pid)
             self.slot_pages[slot].append(pid)
             self.block_tables[slot, j] = pid
-        self._tbl_dirty = True
         self.pages_peak = max(self.pages_peak, self.used_count)
 
     def cow(self, slot: int, token_pos: int):
@@ -206,7 +202,6 @@ class PagedKVPool:
         self.slot_pages[slot][j] = dst
         self.block_tables[slot, j] = dst
         self.ref[pid] -= 1          # shared copy stays live elsewhere
-        self._tbl_dirty = True
         self.cow_copies += 1
         self.pages_peak = max(self.pages_peak, self.used_count)
         return pid, dst
@@ -219,17 +214,25 @@ class PagedKVPool:
             n += bool(self.release(pid))
         self.slot_pages[slot] = []
         self.block_tables[slot, :] = 0
-        self._tbl_dirty = True
         return n
 
     def device_tables(self, n_groups: int) -> jax.Array:
-        """Block tables as a device array broadcast over layer groups."""
-        if self._tbl_dirty or self._tbl_dev is None:
-            tbl = jnp.asarray(self.block_tables)
-            self._tbl_dev = jnp.broadcast_to(
-                tbl[None], (n_groups,) + tbl.shape)
-            self._tbl_dirty = False
-        return self._tbl_dev
+        """Block tables as a device array broadcast over layer groups.
+
+        Cached by table *content* — but only on CPU, where the serving
+        steps disable arena donation (``serve/steps.py``). On accelerator
+        backends the steps donate the arena and the tables ride inside
+        it, so a cached device buffer would be invalidated by the
+        donation the first time it was reused; there the array is rebuilt
+        per call (a few hundred int32s — negligible next to the step)."""
+        key = (n_groups, self.block_tables.tobytes())
+        if self._tbl_cache is not None and self._tbl_cache[0] == key:
+            return self._tbl_cache[1]
+        tbl = jnp.asarray(self.block_tables)
+        dev = jnp.broadcast_to(tbl[None], (n_groups,) + tbl.shape)
+        if jax.default_backend() == "cpu":
+            self._tbl_cache = (key, dev)
+        return dev
 
     # ---- device arena --------------------------------------------------
     def init_arena(self):
@@ -257,122 +260,3 @@ class PagedKVPool:
         return out
 
 
-# -------------------------------------------------------------------------
-# prefill adoption: contiguous batch-1 cache -> arena pages
-# -------------------------------------------------------------------------
-_CONTIG_TO_PAGED = (("k", "k_pages"), ("v", "v_pages"),
-                    ("k_scale", "k_scale_pages"),
-                    ("v_scale", "v_scale_pages"))
-
-
-@functools.lru_cache(maxsize=None)
-def make_adopt(cfg: ModelConfig, page: int):
-    """jit'd (arena, contig_cache, page_ids, slot) -> arena.
-
-    Copies a batch-1 contiguous prefill cache (bucket length T, a multiple
-    of ``page``) into the arena pages listed in ``page_ids`` (length
-    T//page; trailing ids may repeat the null page 0 when the prompt needs
-    fewer pages than the bucket holds — null-page contents are never read).
-    SSM/conv state is dense per-slot and lands in row ``slot``. One compile
-    per prefill bucket length."""
-
-    @jax.jit
-    def adopt(arena, contig, page_ids, slot):
-        out = {}
-        for i, kind in enumerate(cfg.pattern):
-            key = f"b{i}"
-            grp = dict(arena[key])
-            if "attn" in grp:
-                attn = dict(grp["attn"])
-                src = contig[key]["attn"]
-                n = page_ids.shape[0]
-                for c_name, p_name in _CONTIG_TO_PAGED:
-                    if c_name not in src:
-                        continue
-                    s = src[c_name]                    # [G, 1, T, X]
-                    g, _, t, x = s.shape
-                    s = s.reshape(g, n, page, x)
-                    attn[p_name] = attn[p_name].at[:, page_ids].set(s)
-                grp["attn"] = attn
-            if "mamba" in grp:
-                mm = dict(grp["mamba"])
-                src = contig[key]["mamba"]
-                mm["ssm"] = mm["ssm"].at[:, slot].set(src["ssm"][:, 0])
-                mm["conv"] = mm["conv"].at[:, slot].set(src["conv"][:, 0])
-                grp["mamba"] = mm
-            out[key] = grp
-        return out
-
-    return adopt
-
-
-@functools.lru_cache(maxsize=None)
-def make_bucketed_prefill(cfg: ModelConfig, cache_dtype=jnp.float32):
-    """Returns prefill(params, tokens [1,T], valid_len [1]) ->
-
-    (full_logits [1,T,V], cache). Unlike ``models.model.prefill`` this
-    keeps the full logits so the caller can read the logit at the true
-    (pre-padding) last prompt token — right padding is causally invisible
-    to attention, and ``valid_len`` keeps the recurrent SSM state clean.
-    Compiles once per bucket T."""
-    from repro.models.model import forward
-
-    @jax.jit
-    def _prefill(params, tokens, valid_len):
-        cache = KV.init_cache(cfg, 1, tokens.shape[1], cache_dtype)
-        logits, new_cache, _ = forward(cfg, params, tokens, cache=cache,
-                                       valid_len=valid_len)
-        return logits, new_cache
-
-    return _prefill
-
-
-@functools.lru_cache(maxsize=None)
-def make_paged_prefill(cfg: ModelConfig):
-    """Returns suffix_prefill(params, arena_slice, tokens [1,T], start [1],
-    valid [1]) -> (full_logits [1,T,V], arena_slice).
-
-    Prefills an uncached prompt *suffix* directly against the paged arena:
-    queries run at absolute positions ``start + t`` and attend the slot's
-    whole block table, so cached prefix pages adopted by the prefix cache
-    are visible without any contiguous round-trip. ``valid`` is the
-    absolute position bound start + true_suffix_len: reads past it are
-    masked and writes of right-padding bucket garbage are routed to the
-    null page. ``arena_slice`` is the arena with ``block_tbl`` narrowed to
-    the one admitting slot (batch 1). Compiles once per suffix bucket T."""
-    from repro.models.model import forward
-
-    @jax.jit
-    def _suffix_prefill(params, arena, tokens, start, valid):
-        t = tokens.shape[1]
-        positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
-        logits, new_arena, _ = forward(cfg, params, tokens,
-                                       positions=positions, cache=arena,
-                                       valid_len=valid)
-        return logits, new_arena
-
-    return _suffix_prefill
-
-
-@functools.lru_cache(maxsize=None)
-def make_page_copy(cfg: ModelConfig):
-    """jit'd (arena, src, dst) -> arena with page dst a copy of page src
-    in every attention leaf of every group — the device half of
-    :meth:`PagedKVPool.cow` (the host half swaps the block-table entry)."""
-
-    @jax.jit
-    def _copy(arena, src, dst):
-        out = {}
-        for i, kind in enumerate(cfg.pattern):
-            key = f"b{i}"
-            grp = dict(arena[key])
-            if "attn" in grp:
-                attn = dict(grp["attn"])
-                for name, leaf in attn.items():
-                    if name.endswith("_pages"):
-                        attn[name] = leaf.at[:, dst].set(leaf[:, src])
-                grp["attn"] = attn
-            out[key] = grp
-        return out
-
-    return _copy

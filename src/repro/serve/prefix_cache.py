@@ -33,7 +33,8 @@ The pool's per-page refcount is the single source of truth:
     at the root) and returns the page to the pool free list;
   * a shared page is **never scattered into**: the first divergent write
     goes through ``pool.cow`` — the writer gets a private copy (device
-    copy via ``make_page_copy``) and the shared refcount drops by one.
+    copy via the ``serve.steps`` page-copy builder) and the shared
+    refcount drops by one.
 
 Only *full* pages are cached, and a match never covers the final prompt
 token (the engine must compute its logit), so at most
@@ -98,6 +99,7 @@ class PrefixCache:
         self._clock = 0
         self._nodes: Dict[int, _Node] = {}      # page_id -> node
         self.stats = PrefixCacheStats()
+        self.version = 0      # bumped on insert/evict: match memo key
 
     # ---- introspection -------------------------------------------------
     def __len__(self) -> int:
@@ -176,6 +178,8 @@ class PrefixCache:
                 child.stamp = stamp
             node = child
         self.stats.published_pages += new
+        if new:
+            self.version += 1
         return new
 
     # ---- eviction ------------------------------------------------------
@@ -207,6 +211,7 @@ class PrefixCache:
         del node.parent.children[node.key]
         del self._nodes[node.page_id]
         self.pool.release(node.page_id)
+        self.version += 1
 
     def clear(self) -> int:
         """Evict everything evictable (e.g. before resizing the pool)."""

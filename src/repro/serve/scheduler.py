@@ -22,7 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
 
 from repro.serve.paged_kv import pages_for
 
@@ -53,10 +55,14 @@ class Admission:
     prompt tokens (whole pages; empty on a miss). ``suffix_start`` is where
     prefill must actually run from — ``cached_len``, except for a
     whole-prompt hit where it is ``len(prompt) - 1`` so the final token's
-    logit is recomputed (its KV write COWs the shared page it lands in)."""
+    logit is recomputed (its KV write COWs the shared page it lands in).
+    ``dedup`` marks an in-flight dedup: the pages alias a *live slot's*
+    prompt pages (an identical prompt admitted earlier in this run) rather
+    than the radix index's."""
     req: object
     cached_pages: List[int] = dataclasses.field(default_factory=list)
     cached_len: int = 0
+    dedup: bool = False
 
     @property
     def suffix_start(self) -> int:
@@ -69,17 +75,34 @@ class FifoScheduler:
     With a ``prefix_cache``, admission matches the head request's prompt
     against the radix index and hands the engine an :class:`Admission`
     split — the prefill token budget and the pool-capacity check are then
-    charged only for the uncached suffix (still pow2-bucketed)."""
+    charged only for the uncached suffix (still pow2-bucketed).
 
-    def __init__(self, cfg: SchedulerConfig, prefix_cache=None):
+    **In-flight dedup** (``pool`` given): a *pending-prefill table* maps
+    each prompt currently occupying a slot to that leader slot. When the
+    queue head's prompt is identical to a pending one, admission aliases
+    the leader's full-page prompt prefix into the follower's block table
+    (the same adopt→COW→suffix-prefill path a radix hit takes) instead of
+    prefilling it again — identical prompts admitted in the same round
+    share KV even when the prefix-cache index is disabled, or before the
+    leader's pages are published to it. The leader's full prompt pages
+    are append-stable while it decodes (new tokens land in later pages;
+    a page-aligned boundary write goes to a *new* page), so aliasing live
+    slot pages is safe; entries drop when the leader finishes or is
+    preempted, after which the radix index (if any) takes over."""
+
+    def __init__(self, cfg: SchedulerConfig, prefix_cache=None, pool=None):
         self.cfg = cfg
         self.prefix_cache = prefix_cache
+        self.pool = pool              # enables in-flight dedup
         self.queue: Deque = deque()
         self._admit_seq = 0           # monotonically increasing admit stamp
         self.admitted_at: dict = {}   # slot -> admit stamp
         self.preemptions = 0
         self._round_budget = cfg.max_prefill_tokens
         self._round_first = True
+        self.pending_prefill: Dict[bytes, int] = {}   # prompt key -> slot
+        self._slot_keys: Dict[int, bytes] = {}
+        self._match_memo = None   # (req id, index version, pages, len)
 
     def enqueue(self, req) -> None:
         self.queue.append(req)
@@ -110,8 +133,19 @@ class FifoScheduler:
         req = self.queue[0]
         adm = Admission(req)
         if self.prefix_cache is not None:
-            adm.cached_pages, adm.cached_len = \
-                self.prefix_cache.match(req.prompt)
+            # memoized per (head request, index version): a head blocked
+            # on capacity for several rounds must not charge the index's
+            # lookup stats or refresh its LRU stamps once per round
+            memo = self._match_memo
+            key = (id(req), self.prefix_cache.version)
+            if memo is not None and memo[0] == key:
+                adm.cached_pages, adm.cached_len = memo[1]
+            else:
+                adm.cached_pages, adm.cached_len = \
+                    self.prefix_cache.match(req.prompt)
+                self._match_memo = (key, (adm.cached_pages,
+                                          adm.cached_len))
+        self._match_pending(adm)
         padded = bucket_len(len(req.prompt) - adm.suffix_start,
                             self.cfg.page)
         if not self._round_first and padded > self._round_budget:
@@ -128,12 +162,51 @@ class FifoScheduler:
         self.queue.popleft()
         return adm
 
+    # ---- in-flight dedup (pending-prefill table) -----------------------
+    @staticmethod
+    def prompt_key(prompt) -> bytes:
+        return np.asarray(prompt, np.int32).tobytes()
+
+    def note_prefill(self, req, slot: int) -> None:
+        """Record that ``slot`` holds a live prefill of ``req.prompt`` —
+        later identical prompts adopt its full pages instead of
+        prefilling. First prompt in wins; the entry lives until the slot
+        finishes or is preempted."""
+        if self.pool is None:
+            return
+        key = self.prompt_key(req.prompt)
+        if key not in self.pending_prefill:
+            self.pending_prefill[key] = slot
+            self._slot_keys[slot] = key
+
+    def _drop_pending(self, slot: int) -> None:
+        key = self._slot_keys.pop(slot, None)
+        if key is not None and self.pending_prefill.get(key) == slot:
+            del self.pending_prefill[key]
+
+    def _match_pending(self, adm: Admission) -> None:
+        """Upgrade ``adm`` to alias an in-flight identical prompt's pages
+        when that beats the radix match (a slot holds the WHOLE prompt,
+        the index at best its published prefix)."""
+        if self.pool is None:
+            return
+        leader = self.pending_prefill.get(self.prompt_key(adm.req.prompt))
+        if leader is None:
+            return
+        n_full = len(adm.req.prompt) // self.cfg.page
+        pages = self.pool.slot_pages[leader][:n_full]
+        if len(pages) == n_full and n_full * self.cfg.page > adm.cached_len:
+            adm.cached_pages = list(pages)
+            adm.cached_len = n_full * self.cfg.page
+            adm.dedup = True
+
     def on_admit(self, slot: int) -> None:
         self.admitted_at[slot] = self._admit_seq
         self._admit_seq += 1
 
     def on_finish(self, slot: int) -> None:
         self.admitted_at.pop(slot, None)
+        self._drop_pending(slot)
 
     def choose_victim(self, requester: int) -> Optional[int]:
         """Youngest slot admitted strictly AFTER the requester (or None).
@@ -160,3 +233,4 @@ class FifoScheduler:
     def on_preempt(self, slot: int) -> None:
         self.preemptions += 1
         self.admitted_at.pop(slot, None)
+        self._drop_pending(slot)

@@ -1,11 +1,47 @@
-"""Serving step builders: pjit'd prefill and decode with sharded caches
+"""Serving step builders — the ONE place jit/pjit step functions are built.
 
-and QMC-quantized weights (the paper's deployment configuration).
+Both consumers of the serve subsystem go through this module:
+
+  * ``serve.engine.ServeEngine`` (and ``launch/serve.py``, which drives it)
+    uses :func:`build_paged_steps` — the paged continuous-batching step
+    set: batched paged decode, bucketed contiguous prefill, suffix prefill
+    straight into the arena, prefill-adopt, and the COW page copy.
+  * ``launch/dryrun.py`` uses :func:`build_prefill` / :func:`build_decode`
+    — the contiguous production-mesh cells it lowers and costs.
+
+Every builder takes ``(cfg, mesh, params_struct)``. With ``mesh=None`` the
+builders emit plain single-device ``jax.jit`` functions (byte-identical to
+the pre-sharding engine closures, and lru-cached per config so engines
+sharing a ModelConfig reuse XLA executables). With a mesh they emit jit
+functions with **explicit input/output shardings**.
+
+Sharding contract (what shards, what replicates)
+------------------------------------------------
+  * **Weights** — ``launch/sharding.py`` rules: TP dims on ``model``,
+    the non-TP dim of large dense weights on ``data`` (FSDP-style);
+    ShardedQTensor stream stacks shard their leading TP-shard dim on
+    ``model`` and run TP-local through ``qmm_shard_map`` (the QMC
+    serving format's quantize-after-shard contract).
+  * **Paged KV arena** — the ``n_pages`` axis shards over ``data`` (each
+    data shard owns a horizontal slice of the page pool), the fused
+    ``kv_dim`` (and int8 scale head dim) over ``model``. See
+    ``launch.sharding.paged_cache_spec``.
+  * **Block tables** — replicated: any shard must resolve any logical
+    position to a (possibly remote) page; GSPMD routes the cross-shard
+    gather/scatter that results.
+  * **Decode batch** — tokens/positions/logits shard batch over the dp
+    axes when the slot count divides; batch-1 prefill paths replicate.
+  * **SSM/conv state** — dense per-slot, batch on dp when divisible.
+
+Arena buffers are donated on non-CPU backends (decode/suffix-prefill/
+adopt/page-copy all rewrite the arena in place); the CPU backend cannot
+donate and would warn on every call, so donation is disabled there.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +53,13 @@ from repro.launch import sharding as shd
 from repro.models import kvcache as KV
 from repro.models.config import ModelConfig
 from repro.models.model import decode_step as _decode
+from repro.models.model import forward as _forward
 from repro.models.model import prefill as _prefill
 
 
+# ==========================================================================
+# contiguous builders (dry-run cells)
+# ==========================================================================
 def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
                  dtype=jnp.bfloat16):
     if cfg.is_encdec:
@@ -93,3 +133,334 @@ def _logits2d(mesh, batch: int, cfg) -> NamedSharding:
     v_ax = "model" if ("model" in mesh.axis_names
                        and cfg.vocab % tp_n == 0) else None
     return NamedSharding(mesh, P(b_ax, v_ax))
+
+
+@functools.lru_cache(maxsize=None)
+def contiguous_decode(cfg: ModelConfig) -> Callable:
+    """Single-device contiguous decode step (the legacy per-slot engine
+
+    and the mesh-less paged engine share this executable): one jit per
+    ModelConfig (hashable frozen dataclass)."""
+    return jax.jit(lambda p, t, c, pos: _decode(cfg, p, t, c, pos))
+
+
+# ==========================================================================
+# paged serving step set (ServeEngine + launch/serve.py)
+# ==========================================================================
+@dataclasses.dataclass(frozen=True)
+class PagedServeSteps:
+    """The jitted step functions one paged engine instance runs, plus the
+
+    geometry they were built for (the engine validates compatibility).
+
+      decode(params, token [B,1], arena, pos [B]) -> (logits [B,V], arena)
+      prefill(params, tokens [1,T], valid_len [1]) -> (logits [1,T,V],
+          contiguous cache)                    (compiles once per bucket T)
+      suffix_prefill(params, arena_slice, tokens [1,T], start [1],
+          valid [1]) -> (logits [1,T,V], arena_slice)
+      adopt(arena, contig_cache, page_ids, slot) -> arena
+      page_copy(arena, src, dst) -> arena
+    """
+    cfg: ModelConfig
+    mesh: Optional[object]
+    page: int
+    n_pages: int                     # usable pages (arena holds +1 null)
+    max_slots: int
+    max_pages_per_seq: int
+    cache_dtype: object
+    decode: Callable
+    prefill: Callable
+    suffix_prefill: Callable
+    adopt: Callable
+    page_copy: Callable
+
+    def compatible_with(self, *, page, n_pages, max_slots,
+                        max_pages_per_seq, cache_dtype) -> bool:
+        return (self.page == page and self.n_pages == n_pages
+                and self.max_slots == max_slots
+                and self.max_pages_per_seq == max_pages_per_seq
+                and self.cache_dtype == cache_dtype)
+
+
+def default_n_pages(slots: int, max_pages_per_seq: int, mesh=None) -> int:
+    """Default pool size: every slot at full length — rounded UP so the
+
+    arena's total page count (usable + the null page) divides the mesh's
+    ``data`` axis; otherwise ``paged_cache_spec`` would silently
+    replicate the page axis and the sharded arena no-ops."""
+    n = slots * max_pages_per_seq
+    d = meshlib.axis_size(mesh, "data") if mesh is not None else 1
+    if d > 1:
+        n += (-(n + 1)) % d
+    return n
+
+
+def arena_struct(cfg: ModelConfig, *, n_pages: int, page: int,
+                 max_slots: int, max_pages_per_seq: int,
+                 cache_dtype=jnp.float32):
+    """Abstract arena pytree (``n_pages`` usable pages + the null page)."""
+    return jax.eval_shape(
+        lambda: KV.paged_init_cache(cfg, n_pages + 1, page, max_slots,
+                                    max_pages_per_seq, cache_dtype))
+
+
+def _donate(argnums: Tuple[int, ...]) -> dict:
+    """Arena donation kwargs — disabled on CPU, where XLA cannot alias
+
+    buffers and jax warns on every call."""
+    if jax.default_backend() == "cpu":
+        return {}
+    return {"donate_argnums": argnums}
+
+
+def _logits3d(mesh, cfg) -> NamedSharding:
+    """[1, T, V] prefill logits: batch-1 replicated, vocab on model."""
+    tp_n = meshlib.axis_size(mesh, "model")
+    v_ax = "model" if ("model" in mesh.axis_names
+                       and cfg.vocab % tp_n == 0) else None
+    return NamedSharding(mesh, P(None, None, v_ax))
+
+
+def _contig_prefill_cache_shardings(cfg: ModelConfig, mesh,
+                                    cache_dtype):
+    """Sharding tree for the batch-1 bucketed-prefill cache.
+
+    Bucket length T varies per compile, so only shape-independent dims
+    shard: the fused kv_dim (and int8 scale head dim) on ``model``;
+    batch-1 and the sequence dim replicate. Structure is T-independent, so
+    one tree (built at a nominal T) serves every bucket."""
+    struct = cache_struct(cfg, 1, 16, cache_dtype)
+    tp_n = meshlib.axis_size(mesh, "model")
+
+    def leaf_sharding(path, leaf):
+        name = shd._path_str(path)
+        last = leaf.shape[-1]
+        ax = ("model" if ("model" in mesh.axis_names and tp_n > 1
+                          and last % tp_n == 0
+                          and (name.endswith("/k") or name.endswith("/v")
+                               or name.endswith("_scale"))) else None)
+        spec = [None] * leaf.ndim
+        spec[-1] = ax
+        return NamedSharding(mesh, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(struct)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_sharding(p, l) for p, l in flat])
+
+
+def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
+                      page: int, n_pages: int, max_slots: int,
+                      max_pages_per_seq: int,
+                      cache_dtype=jnp.float32) -> PagedServeSteps:
+    """Build the full paged serving step set for one engine geometry.
+
+    ``mesh=None`` → plain single-device jit (lru-shared per config where
+    the function is geometry-independent). With a mesh, every step runs
+    under the runtime mesh context (so ShardedQTensor weights dispatch to
+    ``qmm_shard_map`` and the paged gather/scatter picks up its sharding
+    constraints) and carries explicit input/output shardings per the
+    module-level contract; ``params_struct`` (a pytree of
+    ShapeDtypeStructs matching the serving weights) is then required.
+    """
+    if mesh is None:
+        return PagedServeSteps(
+            cfg=cfg, mesh=None, page=page, n_pages=n_pages,
+            max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
+            cache_dtype=cache_dtype,
+            decode=contiguous_decode(cfg),
+            prefill=_bucketed_prefill_jit(cfg, cache_dtype),
+            suffix_prefill=_suffix_prefill_jit(cfg),
+            adopt=_adopt_jit(cfg, page),
+            page_copy=_page_copy_jit(cfg))
+
+    if params_struct is None:
+        raise ValueError("sharded step builders need params_struct to "
+                         "emit explicit input shardings")
+    dp = meshlib.dp_axes(mesh)
+    a_struct = arena_struct(cfg, n_pages=n_pages, page=page,
+                            max_slots=max_slots,
+                            max_pages_per_seq=max_pages_per_seq,
+                            cache_dtype=cache_dtype)
+    p_sh = shd.shard_params_tree(params_struct, mesh)
+    a_sh = shd.shard_paged_cache_tree(a_struct, mesh)
+    rep = NamedSharding(mesh, P())
+    b_sh = NamedSharding(mesh, shd.batch_spec(mesh, max_slots))
+    tok_sh = NamedSharding(mesh, P(*(tuple(shd.batch_spec(mesh, max_slots))
+                                     + (None,))))
+    l2_sh = _logits2d(mesh, max_slots, cfg)
+    l3_sh = _logits3d(mesh, cfg)
+    c_sh = _contig_prefill_cache_shardings(cfg, mesh, cache_dtype)
+
+    # shared single-device bodies, traced under the mesh context so
+    # matmul dispatch and the paged-cache sharding constraints see it
+    prefill_body = _bucketed_prefill_body(cfg, cache_dtype)
+    suffix_body = _suffix_prefill_body(cfg)
+
+    def decode_fn(params, token, arena, pos):
+        with ctx.use_mesh(mesh, dp):
+            return _decode(cfg, params, token, arena, pos)
+
+    def prefill_fn(params, tokens, valid_len):
+        with ctx.use_mesh(mesh, dp):
+            return prefill_body(params, tokens, valid_len)
+
+    def suffix_fn(params, arena, tokens, start, valid):
+        with ctx.use_mesh(mesh, dp):
+            return suffix_body(params, arena, tokens, start, valid)
+
+    return PagedServeSteps(
+        cfg=cfg, mesh=mesh, page=page, n_pages=n_pages,
+        max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
+        cache_dtype=cache_dtype,
+        decode=jax.jit(decode_fn,
+                       in_shardings=(p_sh, tok_sh, a_sh, b_sh),
+                       out_shardings=(l2_sh, a_sh),
+                       **_donate((2,))),
+        prefill=jax.jit(prefill_fn,
+                        in_shardings=(p_sh, rep, rep),
+                        out_shardings=(l3_sh, c_sh)),
+        suffix_prefill=jax.jit(suffix_fn,
+                               in_shardings=(p_sh, a_sh, rep, rep, rep),
+                               out_shardings=(l3_sh, a_sh),
+                               **_donate((1,))),
+        # adopt's contiguous-cache input varies per bucket T, so its
+        # shardings are inherited from the prefill output; the arena
+        # output is pinned to the arena contract
+        adopt=jax.jit(_adopt_body(cfg, page), out_shardings=a_sh,
+                      **_donate((0,))),
+        page_copy=jax.jit(_page_copy_body(cfg),
+                          in_shardings=(a_sh, rep, rep),
+                          out_shardings=a_sh, **_donate((0,))))
+
+
+# --------------------------------------------------------------------------
+# step bodies (shared by the mesh-less lru-cached jits and the sharded
+# builders above)
+# --------------------------------------------------------------------------
+_CONTIG_TO_PAGED = (("k", "k_pages"), ("v", "v_pages"),
+                    ("k_scale", "k_scale_pages"),
+                    ("v_scale", "v_scale_pages"))
+
+
+def _adopt_body(cfg: ModelConfig, page: int):
+    """(arena, contig_cache, page_ids, slot) -> arena.
+
+    Copies a batch-1 contiguous prefill cache (bucket length T, a multiple
+    of ``page``) into the arena pages listed in ``page_ids`` (length
+    T//page; trailing ids may repeat the null page 0 when the prompt needs
+    fewer pages than the bucket holds — null-page contents are never
+    read). SSM/conv state is dense per-slot and lands in row ``slot``.
+    One compile per prefill bucket length."""
+
+    def adopt(arena, contig, page_ids, slot):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                src = contig[key]["attn"]
+                n = page_ids.shape[0]
+                for c_name, p_name in _CONTIG_TO_PAGED:
+                    if c_name not in src:
+                        continue
+                    s = src[c_name]                    # [G, 1, T, X]
+                    g, _, t, x = s.shape
+                    s = s.reshape(g, n, page, x)
+                    attn[p_name] = attn[p_name].at[:, page_ids].set(s)
+                grp["attn"] = attn
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                src = contig[key]["mamba"]
+                mm["ssm"] = mm["ssm"].at[:, slot].set(src["ssm"][:, 0])
+                mm["conv"] = mm["conv"].at[:, slot].set(src["conv"][:, 0])
+                grp["mamba"] = mm
+            out[key] = grp
+        return out
+
+    return adopt
+
+
+def _page_copy_body(cfg: ModelConfig):
+    """(arena, src, dst) -> arena with page dst a copy of page src in
+
+    every attention leaf of every group — the device half of
+    ``PagedKVPool.cow`` (the host half swaps the block-table entry)."""
+
+    def _copy(arena, src, dst):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                for name, leaf in attn.items():
+                    if name.endswith("_pages"):
+                        attn[name] = leaf.at[:, dst].set(leaf[:, src])
+                grp["attn"] = attn
+            out[key] = grp
+        return out
+
+    return _copy
+
+
+@functools.lru_cache(maxsize=None)
+def _adopt_jit(cfg: ModelConfig, page: int):
+    return jax.jit(_adopt_body(cfg, page))
+
+
+@functools.lru_cache(maxsize=None)
+def _page_copy_jit(cfg: ModelConfig):
+    return jax.jit(_page_copy_body(cfg))
+
+
+def _bucketed_prefill_body(cfg: ModelConfig, cache_dtype=jnp.float32):
+    """prefill(params, tokens [1,T], valid_len [1]) ->
+
+    (full_logits [1,T,V], cache). Unlike ``models.model.prefill`` this
+    keeps the full logits so the caller can read the logit at the true
+    (pre-padding) last prompt token — right padding is causally invisible
+    to attention, and ``valid_len`` keeps the recurrent SSM state clean.
+    Compiles once per bucket T."""
+
+    def _bucketed(params, tokens, valid_len):
+        cache = KV.init_cache(cfg, 1, tokens.shape[1], cache_dtype)
+        logits, new_cache, _ = _forward(cfg, params, tokens, cache=cache,
+                                        valid_len=valid_len)
+        return logits, new_cache
+
+    return _bucketed
+
+
+def _suffix_prefill_body(cfg: ModelConfig):
+    """suffix_prefill(params, arena_slice, tokens [1,T], start [1],
+    valid [1]) -> (full_logits [1,T,V], arena_slice).
+
+    Prefills an uncached prompt *suffix* directly against the paged arena:
+    queries run at absolute positions ``start + t`` and attend the slot's
+    whole block table, so cached prefix pages adopted by the prefix cache
+    are visible without any contiguous round-trip. ``valid`` is the
+    absolute position bound start + true_suffix_len: reads past it are
+    masked and writes of right-padding bucket garbage are routed to the
+    null page. ``arena_slice`` is the arena with ``block_tbl`` narrowed to
+    the one admitting slot (batch 1). Compiles once per suffix bucket T."""
+
+    def _suffix(params, arena, tokens, start, valid):
+        t = tokens.shape[1]
+        positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+        logits, new_arena, _ = _forward(cfg, params, tokens,
+                                        positions=positions, cache=arena,
+                                        valid_len=valid)
+        return logits, new_arena
+
+    return _suffix
+
+
+@functools.lru_cache(maxsize=None)
+def _bucketed_prefill_jit(cfg: ModelConfig, cache_dtype=jnp.float32):
+    return jax.jit(_bucketed_prefill_body(cfg, cache_dtype))
+
+
+@functools.lru_cache(maxsize=None)
+def _suffix_prefill_jit(cfg: ModelConfig):
+    return jax.jit(_suffix_prefill_body(cfg))

@@ -14,6 +14,11 @@ import pytest  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running (subprocess compile-heavy) tests")
+
+
 @pytest.fixture(scope="session")
 def tiny_dense():
     return ModelConfig(name="t-dense", family="dense", n_layers=2,

@@ -1,0 +1,279 @@
+"""Sharded paged serving: the unified step-builder layer, mesh sharding
+
+specs for the paged arena, sharded-vs-unsharded greedy parity (subprocess
+with a forced 4-device host platform), in-flight prompt dedup, and the
+per-shard DSE traffic split."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch import sharding as shd
+from repro.memsys.workload import (kv_traffic_paged, make_traffic,
+                                   shard_serve_traffic)
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve import steps as serve_steps
+from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=64)
+CFG = ModelConfig(name="t", family="dense", **BASE)
+CFG_HYBRID = ModelConfig(name="th", family="hybrid", pattern=("hybrid",),
+                         d_state=16, ssm_headdim=32, **BASE)
+
+
+def _params(cfg):
+    return init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+# -------------------------------------------------------------------------
+# paged arena sharding specs (no multi-device requirement: specs only)
+# -------------------------------------------------------------------------
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+
+
+MESH22 = FakeMesh((2, 2), ("data", "model"))
+
+
+def test_paged_arena_specs():
+    # [G, n_pages, page, kv_dim]: pages on data, fused kv on model
+    assert tuple(shd.paged_cache_spec(
+        "b0/attn/k_pages", FakeLeaf((2, 32, 16, 64)), MESH22)) == \
+        (None, "data", None, "model")
+    # int8 scales: head dim on model when divisible
+    assert tuple(shd.paged_cache_spec(
+        "b0/attn/k_scale_pages", FakeLeaf((2, 32, 16, 2)), MESH22)) == \
+        (None, "data", None, "model")
+    # non-divisible page count / head count replicate
+    assert tuple(shd.paged_cache_spec(
+        "b0/attn/v_pages", FakeLeaf((2, 33, 16, 63)), MESH22)) == \
+        (None, None, None, None)
+    # block tables replicate (any shard resolves any position)
+    assert tuple(shd.paged_cache_spec(
+        "b0/attn/block_tbl", FakeLeaf((2, 8, 4)), MESH22)) == ()
+    # dense mamba state: batch on dp when divisible
+    assert tuple(shd.paged_cache_spec(
+        "b0/mamba/ssm", FakeLeaf((2, 8, 4, 16, 16)), MESH22)) == \
+        (None, "data", None, None, None)
+
+
+# -------------------------------------------------------------------------
+# one builder layer: engine and launch path share PagedServeSteps
+# -------------------------------------------------------------------------
+def test_engine_accepts_prebuilt_steps_and_matches_legacy():
+    """The launch/serve.py flow: steps built through serve.steps, handed
+
+    to the engine — tokens identical to the legacy per-slot engine."""
+    params = _params(CFG)
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i, prompt=rng.integers(2, 64, int(L)).astype(
+        np.int32), max_new_tokens=5)
+        for i, L in enumerate(rng.integers(4, 14, size=6))]
+    legacy = _clone(reqs)
+    LegacyServeEngine(CFG, params, slots=4, max_len=32).run(legacy)
+    step_set = serve_steps.build_paged_steps(
+        CFG, None, page=8, n_pages=16, max_slots=4, max_pages_per_seq=4)
+    paged = _clone(reqs)
+    ServeEngine(CFG, params, slots=4, max_len=32, page_size=8, n_pages=16,
+                step_set=step_set).run(paged)
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in paged]
+
+
+def test_engine_rejects_mismatched_steps():
+    step_set = serve_steps.build_paged_steps(
+        CFG, None, page=8, n_pages=16, max_slots=4, max_pages_per_seq=4)
+    with pytest.raises(ValueError):
+        ServeEngine(CFG, _params(CFG), slots=4, max_len=32, page_size=16,
+                    step_set=step_set)        # page 16 != built-for 8
+
+
+def test_sharded_builder_requires_params_struct():
+    class _M:   # only truthiness is checked before params_struct
+        pass
+    with pytest.raises(ValueError):
+        serve_steps.build_paged_steps(CFG, _M(), None, page=8, n_pages=16,
+                                      max_slots=4, max_pages_per_seq=4)
+
+
+# -------------------------------------------------------------------------
+# in-flight dedup (pending-prefill table)
+# -------------------------------------------------------------------------
+def _identical_requests(n=4, length=20, seed=3, max_new=5):
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(2, 64, size=length).astype(np.int32)
+    return [Request(uid=i, prompt=shared.copy(), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_inflight_dedup_aliases_identical_prompts():
+    params = _params(CFG)
+    legacy = _identical_requests()
+    LegacyServeEngine(CFG, params, slots=4, max_len=48).run(legacy)
+    reqs = _identical_requests()
+    eng = ServeEngine(CFG, params, slots=4, max_len=48, page_size=8)
+    eng.run(reqs)
+    # 3 followers alias the leader's two full pages (20 tokens, page 8)
+    assert eng.stats.dedup_hits == 3
+    assert eng.stats.cache_hit_tokens == 3 * 16
+    assert eng.stats.prefill_tokens < 4 * 20
+    assert [r.out_tokens for r in reqs] == [r.out_tokens for r in legacy]
+
+
+def test_inflight_dedup_off_prefills_everything():
+    params = _params(CFG)
+    reqs = _identical_requests()
+    eng = ServeEngine(CFG, params, slots=4, max_len=48, page_size=8,
+                      inflight_dedup=False)
+    eng.run(reqs)
+    assert eng.stats.dedup_hits == 0
+    assert eng.stats.prefill_tokens == 4 * 20
+
+
+def test_radix_match_takes_precedence_over_dedup():
+    """With the prefix cache on, the leader publishes its full pages at
+
+    admission, so followers hit the index (equal coverage) — the
+    pending-prefill table only upgrades strictly-better matches."""
+    eng = ServeEngine(CFG, _params(CFG), slots=4, max_len=48, page_size=8,
+                      prefix_cache=True)
+    eng.run(_identical_requests())
+    assert eng.stats.cache_hits == 3
+    assert eng.stats.dedup_hits == 0
+
+
+def test_inflight_dedup_sub_page_prompts_miss():
+    """Prompts shorter than a page own no full page to alias."""
+    eng = ServeEngine(CFG, _params(CFG), slots=4, max_len=48, page_size=8)
+    eng.run(_identical_requests(length=6))
+    assert eng.stats.dedup_hits == 0
+
+
+def test_inflight_dedup_forced_on_hybrid_raises():
+    with pytest.raises(NotImplementedError):
+        ServeEngine(CFG_HYBRID, _params(CFG_HYBRID), slots=2, max_len=32,
+                    inflight_dedup=True)
+
+
+def test_hybrid_auto_disables_dedup():
+    eng = ServeEngine(CFG_HYBRID, _params(CFG_HYBRID), slots=2, max_len=32)
+    assert eng._dedup is False
+
+
+# -------------------------------------------------------------------------
+# per-shard DSE traffic
+# -------------------------------------------------------------------------
+def test_shard_serve_traffic_split():
+    base = make_traffic(CFG, "qmc", seq_len=64)
+    paged = kv_traffic_paged(CFG, [24, 40], page=16)
+    batched = paged.apply(base)
+    per_dev = shard_serve_traffic(batched, data_shards=2, model_shards=2)
+    assert per_dev.weight_bits == pytest.approx(batched.weight_bits / 2)
+    assert per_dev.kv_bits == pytest.approx(batched.kv_bits / 4)
+    assert per_dev.act_bits == pytest.approx(batched.act_bits / 2)
+    # capacity accounting splits with TP only
+    assert per_dev.total_cells == pytest.approx(batched.total_cells / 2)
+    assert "shard_d2m2" in per_dev.name
+
+
+# -------------------------------------------------------------------------
+# sharded-vs-unsharded greedy parity (forced 4-device host platform)
+# -------------------------------------------------------------------------
+PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax, numpy as np
+from repro.launch import mesh as meshlib
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve.engine import Request, ServeEngine
+from repro.core.qconfig import QMCConfig
+from repro.core.serving_quant import quantize_for_serving
+from repro.core.qtensor_sharded import ShardedQTensor
+
+assert len(jax.devices()) == 4, jax.devices()
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=64)
+CFG = ModelConfig(name="t", family="dense", **BASE)
+CFG8 = ModelConfig(name="t8", family="dense", kv_cache_quant=True, **BASE)
+CFGQ = ModelConfig(name="tq", family="dense", n_layers=2, d_model=128,
+                   n_heads=8, n_kv_heads=2, d_ff=256, vocab=128)
+
+def requests(cfg, n=4, seed=5, max_new=4):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(2, cfg.vocab,
+                                               size=int(L)).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, L in enumerate(rng.integers(4, 14, size=n))]
+
+def run(cfg, params, mesh):
+    reqs = requests(cfg)
+    eng = ServeEngine(cfg, params, slots=4, max_len=32, page_size=8,
+                      n_pages=15, mesh=mesh)   # 15+1 null: splits on data
+    eng.run(reqs)
+    return [r.out_tokens for r in reqs]
+
+m1 = meshlib.make_mesh((1, 1), ("data", "model"))
+m4 = meshlib.make_mesh((2, 2), ("data", "model"))
+out = {}
+for label, cfg in (("fp32", CFG), ("int8kv", CFG8)):
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    ref, one, four = run(cfg, p, None), run(cfg, p, m1), run(cfg, p, m4)
+    out[label] = {"nomesh_eq_m1": ref == one, "m1_eq_m4": one == four,
+                  "tokens": sum(len(t) for t in ref)}
+# QMC serving format: quantize-after-shard at TP=2, same weights both runs
+pq = quantize_for_serving(init_params(CFGQ, jax.random.PRNGKey(0)),
+                          QMCConfig(rho=0.3, granularity="subtile"),
+                          tp_shards=2, min_dim=64)
+n_sqt = sum(isinstance(l, ShardedQTensor)
+            for l in jax.tree_util.tree_leaves(
+                pq, is_leaf=lambda x: isinstance(x, ShardedQTensor)))
+one, four = run(CFGQ, pq, m1), run(CFGQ, pq, m4)
+out["sqt"] = {"m1_eq_m4": one == four, "n_sharded_qtensors": n_sqt,
+              "tokens": sum(len(t) for t in one)}
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_sharded_greedy_parity_4dev():
+    """Greedy decode on a forced 4-device (2 data x 2 model) host mesh is
+
+    token-identical to the 1-device engine — dense fp32 KV, int8 KV, and
+    ShardedQTensor (QMC serving format) weights with the sharded arena."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", PARITY_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1500)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    out = json.loads([l for l in proc.stdout.splitlines()
+                      if l.startswith("RESULT")][0][len("RESULT"):])
+    for label in ("fp32", "int8kv"):
+        assert out[label]["nomesh_eq_m1"], out
+        assert out[label]["m1_eq_m4"], out
+        assert out[label]["tokens"] > 0
+    assert out["sqt"]["n_sharded_qtensors"] >= 6, out
+    assert out["sqt"]["m1_eq_m4"], out
