@@ -124,6 +124,7 @@ def run() -> dict:
         "sys_prompt_len": SYS_PROMPT_LEN,
         "slots": {str(s): _measure_prefix(params, s) for s in (4, 8)}}
     results["weights"] = _measure_weights(params)
+    results["paged_attention"] = _measure_paged_attention(params)
     results["sharded"] = _measure_sharded()
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
@@ -200,6 +201,59 @@ def _measure_weights(params) -> dict:
           f"{out['qmc']['p50_token_latency_us']:.0f},"
           f"{out['qmc']['tokens_per_s']:.1f}tok/s "
           f"vs_fp32={out['qmc_vs_fp32_tokens_per_s']:.2f}x")
+    return out
+
+
+def _measure_paged_attention(params) -> dict:
+    """Pallas page-table kernel vs the XLA full-width reference gather.
+
+    Records token parity, tokens/s (interpret-mode kernel on CPU — the
+    wall-clock column is meaningful on a TPU backend only), and the
+    gather-work split the kernel changes: live pages actually streamed vs
+    the full block-table width the reference materializes, counted by the
+    engine per decode step AND charged by the DSE
+    (``kv_traffic_paged(live_only=...)``) so the two accounts are shown
+    side by side."""
+    def timed(**kw):
+        # warm-up pays jit compiles; the timed second run also supplies
+        # the parity tokens and gather-work counters (no extra runs)
+        ServeEngine(CFG, params, slots=4, max_len=MAX_LEN,
+                    page_size=PAGE, **kw).run(_requests())
+        eng = ServeEngine(CFG, params, slots=4, max_len=MAX_LEN,
+                          page_size=PAGE, **kw)
+        res = eng.run(_requests())
+        p50, p95 = _pcts(eng.stats.per_token_latencies())
+        row = {"tokens": sum(len(r.out_tokens) for r in res),
+               "tokens_per_s": eng.stats.tokens_per_s,
+               "decode_calls": eng.stats.decode_steps,
+               "p50_token_latency_us": p50 * 1e6,
+               "p95_token_latency_us": p95 * 1e6}
+        return row, [r.out_tokens for r in res], eng
+    out = {}
+    out["reference"], ref_toks, _ = timed()
+    out["kernel"], kern_toks, eng = timed(paged_attention=True)
+    s = eng.stats
+    out["token_parity"] = ref_toks == kern_toks
+    out["gather_work"] = {
+        "kv_pages_live": s.kv_pages_live,
+        "kv_pages_full_width": s.kv_pages_full,
+        "live_fraction": s.kv_pages_live / max(s.kv_pages_full, 1)}
+    # DSE view at the moment every request is full length
+    lens = [len(r.prompt) + MAX_NEW for r in _requests()]
+    mpps = eng.max_pages_per_seq
+    live = kv_traffic_paged(CFG, lens, page=PAGE)
+    wide = kv_traffic_paged(CFG, lens, page=PAGE, live_only=False,
+                            max_pages_per_seq=mpps)
+    out["dse"] = {
+        "kv_bits_per_step_live": live.kv_bits_per_step,
+        "kv_bits_per_step_full_width": wide.kv_bits_per_step,
+        "dead_page_bits_per_step": (wide.kv_bits_per_step
+                                    - live.kv_bits_per_step)}
+    print(f"serving/paged_attention_s4,"
+          f"{out['kernel']['p50_token_latency_us']:.0f},"
+          f"parity={out['token_parity']} "
+          f"live_pages={s.kv_pages_live}/{s.kv_pages_full} "
+          f"({1 - out['gather_work']['live_fraction']:.0%} gather saved)")
     return out
 
 

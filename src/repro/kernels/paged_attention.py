@@ -1,0 +1,316 @@
+"""Pallas TPU kernel: paged decode attention over the serving KV arena.
+
+The serving hot path's XLA reference gather (``models.attention.
+paged_cache_read``) materializes the FULL block-table width for every
+decode lane — compute and on-chip residency scale with ``max_pages`` even
+when a lane holds one live page. This kernel consumes the paged arena +
+block tables directly and streams only live pages, which is exactly the
+page-granular LPDDR5 traffic ``memsys.workload.kv_traffic_paged``
+(``live_only=True``) charges the Eq. (3)/(4) DSE.
+
+Grid / BlockSpec contract
+-------------------------
+  * Grid ``(B, KV, P)`` — batch lane x KV head x block-table slot, with
+    the page axis innermost so the online-softmax scratch accumulates
+    across one lane-head's pages before moving on.
+  * The arena is viewed as ``[n_pages, page, KV, hd]`` (plus
+    ``[n_pages, page, KV]`` scales for the int8 layout). Per grid step the
+    BlockSpec index map does a data-dependent fetch of ONE page of ONE KV
+    head: block ``(1, page, 1, hd)`` at row ``tbl[b, p]`` — the
+    ``PrefetchScalarGridSpec`` scalar-prefetch mechanism, same as
+    ``kernels/qmm.py``'s stream routing.
+  * Scalar prefetch operands: ``tbl [B, P]`` (block tables), ``seq [B]``
+    (valid KV length per lane, i.e. decode position + 1) and
+    ``meta = [page_offset, n_local_pages]`` (shard-local page-id window;
+    ``[0, n_pages]`` on a single device).
+  * Dead or out-of-shard table slots are remapped to arena row 0 by the
+    index map (never a live page — row 0 is the reserved null page) and
+    fully masked in the body, so they contribute nothing and cost no
+    live-page stream: per-step gather work is ``sum_b ceil(seq_b/page)``
+    pages, not ``B * P``.
+  * Online softmax (flash-style running max / sum) keeps exactly one page
+    of K/V resident per step; GQA query groups ride along as the ``G``
+    rows of each block. int8-KV dequant (per-page-slot, per-head scales
+    from ``models.kvcache.quantize_kv``'s layout) is fused before the dot.
+  * Outputs: normalized ``o [B, KV, G, hd]`` plus the running ``(m, l)``
+    softmax state — the state is what makes the kernel mesh-composable:
+    under the PR-3 sharding contract the arena's page axis shards over
+    ``data``, so each shard runs the kernel over its own page slice and
+    the partial ``(o, m, l)`` triples merge with a flash-decoding-style
+    ``pmax``/``psum`` reduction (``shard_map`` over the full
+    ``(data, model)`` mesh; KV heads stay ``model``-local like
+    ``qmm_shard_map``).
+
+``interpret=True`` (the default off-TPU) executes the real kernel body on
+CPU, so CI runs the same code path the TPU backend compiles. Block shapes
+follow the problem geometry rather than the (8/16/32, 128) MXU tiles —
+fine in interpret mode; a production TPU build would pad ``G``/``hd`` up
+to the dtype's native tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.launch.mesh import axis_size as _mesh_axis
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+# ---------------------------------------------------------------------------
+# kernel body
+# ---------------------------------------------------------------------------
+def _accumulate(tbl_ref, seq_ref, meta_ref, q_ref, k_ref, v_ref,
+                ks_ref, vs_ref, o_ref, mo_ref, lo_ref,
+                acc_ref, m_ref, l_ref, *, page: int,
+                window: Optional[int], attn_softcap: Optional[float],
+                scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq = seq_ref[b]
+    local = tbl_ref[b, p] - meta_ref[0]
+    owned = (local >= 0) & (local < meta_ref[1])
+    live = (p * page) < seq
+
+    qs = q_ref[0, 0].astype(jnp.float32) * scale           # [G, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # [page, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    if ks_ref is not None:                                 # fused dequant
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+
+    scores = jax.lax.dot_general(qs, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    if attn_softcap:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+
+    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    mask = (pos < seq) & owned & live                      # [1, page]
+    if window is not None:
+        mask = mask & ((seq - 1) - pos < window)
+    scores = jnp.where(mask, scores, -1e30)
+
+    cm = jnp.max(scores, axis=-1, keepdims=True)           # [G, 1]
+    m_new = jnp.maximum(m_ref[...], cm)
+    # probs masked explicitly: with every score at -1e30 AND m still at
+    # its -1e30 init (a fully dead lane) exp(score - m_new) would be 1
+    probs = jnp.where(mask, jnp.exp(scores - m_new), 0.0)  # [G, page]
+    corr = jnp.exp(m_ref[...] - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(probs, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        probs, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _done():
+        # a lane with no live position keeps l == 0 -> output exactly 0
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        mo_ref[0, 0] = m_ref[:, 0]
+        lo_ref[0, 0] = l_ref[:, 0]
+
+
+def _make_kernel(page, window, attn_softcap, scale, quantized):
+    body = functools.partial(_accumulate, page=page, window=window,
+                             attn_softcap=attn_softcap, scale=scale)
+    if quantized:
+        def kernel(tbl, seq, meta, q, k, v, ks, vs, o, mo, lo, acc, m, l):
+            body(tbl, seq, meta, q, k, v, ks, vs, o, mo, lo, acc, m, l)
+    else:
+        def kernel(tbl, seq, meta, q, k, v, o, mo, lo, acc, m, l):
+            body(tbl, seq, meta, q, k, v, None, None, o, mo, lo, acc, m, l)
+    return kernel
+
+
+# ---------------------------------------------------------------------------
+# shard-local call
+# ---------------------------------------------------------------------------
+def _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta, *,
+                     window, attn_softcap, interpret):
+    """One shard's kernel call.
+
+    q4 [B, KV, G, hd]; kp/vp [n_pages, page, KV, hd]; ksp/vsp
+    [n_pages, page, KV] or None; tbl [B, P]; seq [B];
+    meta = [page_offset, n_local_pages]. Returns (o, m, l) — normalized
+    output plus the online-softmax state for cross-shard merging.
+    """
+    bsz, n_kv, g, hd = q4.shape
+    page = kp.shape[1]
+    n_tbl = tbl.shape[1]
+    quantized = ksp is not None
+    scale = float(hd) ** -0.5
+
+    def _page_sel(b, h, p, tbl_ref, seq_ref, meta_ref):
+        local = tbl_ref[b, p] - meta_ref[0]
+        ok = ((local >= 0) & (local < meta_ref[1])
+              & (p * page < seq_ref[b]))
+        return jnp.where(ok, local, 0)
+
+    def q_map(b, h, p, *refs):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, p, *refs):
+        return (_page_sel(b, h, p, *refs), 0, h, 0)
+
+    def sc_map(b, h, p, *refs):
+        return (_page_sel(b, h, p, *refs), 0, h)
+
+    def o_map(b, h, p, *refs):
+        return (b, h, 0, 0)
+
+    def ml_map(b, h, p, *refs):
+        return (b, h, 0)
+
+    in_specs = [pl.BlockSpec((1, 1, g, hd), q_map),
+                pl.BlockSpec((1, page, 1, hd), kv_map),
+                pl.BlockSpec((1, page, 1, hd), kv_map)]
+    operands = [q4, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page, 1), sc_map),
+                     pl.BlockSpec((1, page, 1), sc_map)]
+        operands += [ksp, vsp]
+
+    call = pl.pallas_call(
+        _make_kernel(page, window, attn_softcap, scale, quantized),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(bsz, n_kv, n_tbl),
+            in_specs=in_specs,
+            out_specs=[pl.BlockSpec((1, 1, g, hd), o_map),
+                       pl.BlockSpec((1, 1, g), ml_map),
+                       pl.BlockSpec((1, 1, g), ml_map)],
+            scratch_shapes=[pltpu.VMEM((g, hd), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32),
+                            pltpu.VMEM((g, 1), jnp.float32)]),
+        out_shape=[jax.ShapeDtypeStruct((bsz, n_kv, g, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, n_kv, g), jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, n_kv, g), jnp.float32)],
+        interpret=interpret,
+    )
+    return call(tbl, seq, meta, *operands)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+def shard_compatible(mesh, n_pages_total: int, n_kv: int) -> bool:
+    """Whether the shard-local kernel honors the PR-3 arena sharding:
+
+    the page axis must divide ``data`` (each shard owns an equal page
+    slice) and the KV head count must divide ``model`` (heads stay
+    TP-local; a fused-kv_dim split through the middle of a head — legal
+    for the XLA gather — cannot run head-local)."""
+    if mesh is None:
+        return True
+    d = _mesh_axis(mesh, "data")
+    m = _mesh_axis(mesh, "model")
+    return n_pages_total % max(d, 1) == 0 and n_kv % max(m, 1) == 0
+
+
+def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
+                           *, n_kv: int, head_dim: int,
+                           window: Optional[int] = None,
+                           attn_softcap: Optional[float] = None,
+                           mesh=None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Decode attention straight off the paged arena.
+
+    q ``[B, 1, H, hd]``; ``cache`` holds ``k_pages/v_pages
+    [n_pages, page, KV*hd]`` (int8 layouts add ``{k,v}_scale_pages
+    [n_pages, page, KV]``) and ``block_tbl [B, max_pages]``;
+    ``seq_len [B]`` is each lane's valid KV length (decode position + 1;
+    0 marks an inactive lane, whose output is exactly 0). Returns
+    ``[B, 1, H, hd]`` in q's dtype.
+
+    With a mesh the kernel runs shard-local under ``shard_map`` over the
+    full ``(data, model)`` mesh: each data shard streams only its slice
+    of the page pool and the partial softmax states merge with a
+    flash-decoding ``pmax``/``psum``; KV heads split over ``model``.
+    Callers must check :func:`shard_compatible` first.
+    """
+    b, s, h, hd = q.shape
+    if s != 1:
+        raise ValueError(f"decode kernel takes one query token, got S={s}")
+    if hd != head_dim or h % n_kv:
+        raise ValueError((q.shape, n_kv, head_dim))
+    g = h // n_kv
+    if interpret is None:
+        interpret = not _on_tpu()
+
+    kp = cache["k_pages"]
+    vp = cache["v_pages"]
+    n_pages, page, _ = kp.shape
+    kp = kp.reshape(n_pages, page, n_kv, hd)
+    vp = vp.reshape(n_pages, page, n_kv, hd)
+    ksp = vsp = None
+    if "k_scale_pages" in cache:
+        ksp = cache["k_scale_pages"]
+        vsp = cache["v_scale_pages"]
+    q4 = q.reshape(b, n_kv, g, hd)
+    tbl = cache["block_tbl"].astype(jnp.int32)
+    seq = seq_len.astype(jnp.int32)
+    kw = dict(window=window, attn_softcap=attn_softcap, interpret=interpret)
+
+    d_n = _mesh_axis(mesh, "data") if mesh is not None else 1
+    m_n = _mesh_axis(mesh, "model") if mesh is not None else 1
+    if mesh is None or d_n * m_n == 1:
+        meta = jnp.array([0, n_pages], jnp.int32)
+        o, _, _ = _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta,
+                                   **kw)
+        return o.astype(q.dtype).reshape(b, 1, h, hd)
+
+    if not shard_compatible(mesh, n_pages, n_kv):
+        raise ValueError("arena/head geometry does not divide the mesh; "
+                         "gate on shard_compatible() before dispatching")
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    n_local = n_pages // d_n
+
+    def body(q4, kp, vp, ksp, vsp, tbl, seq):
+        off = jax.lax.axis_index("data").astype(jnp.int32) * n_local
+        meta = jnp.stack([off, jnp.int32(n_local)])
+        o, m, l = _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta,
+                                   **kw)
+        # flash-decoding merge of per-shard softmax states over `data`
+        mg = jax.lax.pmax(m, "data")
+        w = jnp.exp(m - mg) * l                          # [B, KVl, G]
+        den = jax.lax.psum(w, "data")
+        num = jax.lax.psum(o * w[..., None], "data")
+        return num / jnp.maximum(den, 1e-30)[..., None]
+
+    if ksp is None:
+        def body2(q4, kp, vp, tbl, seq):
+            return body(q4, kp, vp, None, None, tbl, seq)
+        specs = (P(None, "model", None, None),
+                 P("data", None, "model", None),
+                 P("data", None, "model", None), P(None, None), P(None))
+        o = shard_map(body2, mesh=mesh, in_specs=specs,
+                      out_specs=P(None, "model", None, None),
+                      check_rep=False)(q4, kp, vp, tbl, seq)
+    else:
+        specs = (P(None, "model", None, None),
+                 P("data", None, "model", None),
+                 P("data", None, "model", None),
+                 P("data", None, "model"), P("data", None, "model"),
+                 P(None, None), P(None))
+        o = shard_map(body, mesh=mesh, in_specs=specs,
+                      out_specs=P(None, "model", None, None),
+                      check_rep=False)(q4, kp, vp, ksp, vsp, tbl, seq)
+    return o.astype(q.dtype).reshape(b, 1, h, hd)

@@ -44,6 +44,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV pages copy-on-write")
+    ap.add_argument("--paged-attention", action="store_true",
+                    help="decode through the Pallas page-table kernel "
+                         "(streams live pages only; interpret-mode off "
+                         "TPU)")
     ap.add_argument("--sys-prompt-len", type=int, default=0,
                     help="prepend a shared system prompt of this length "
                          "to every request (multi-tenant demo)")
@@ -98,16 +102,22 @@ def main():
     step_set = serve_steps.build_paged_steps(
         cfg, mesh, p_struct, page=args.page_size,
         n_pages=n_pages, max_slots=args.slots,
-        max_pages_per_seq=mpps)
+        max_pages_per_seq=mpps, paged_attention=args.paged_attention)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=max_len,
                       page_size=args.page_size, mesh=mesh,
                       step_set=step_set,
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      paged_attention=args.paged_attention)
     eng.run(reqs)
     s = eng.stats
     print(f"[serve] {s.prefills} prefills, {s.decode_steps} decode steps, "
           f"{s.tokens_out} tokens in {s.wall_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s)")
+    if args.paged_attention and s.kv_pages_full:
+        print(f"[serve] paged-attention kernel: {s.kv_pages_live} live "
+              f"pages streamed vs {s.kv_pages_full} full-width "
+              f"({1 - s.kv_pages_live / s.kv_pages_full:.0%} gather work "
+              f"saved)")
     if args.prefix_cache:
         print(f"[serve] prefix cache: {s.cache_hits} hits, "
               f"hit_rate={s.hit_rate:.2f}, prefill-token reduction="

@@ -73,9 +73,10 @@ class PagedKVTraffic:
     A block-table-aware attention kernel streams *whole live pages*, so
     per-step traffic is page-rounded; residency counts allocated pages, so
     pool sizing sees internal fragmentation explicitly. ``exact`` fields
-    are the contiguous (unpadded) equivalents for comparison. (The CPU
-    reference gather in ``models/attention.py`` reads the full block-table
-    width instead — this model describes the target hardware path.)"""
+    are the contiguous (unpadded) equivalents for comparison. The Pallas
+    decode kernel (``kernels/paged_attention.py``) gathers exactly the
+    ``live_only=True`` stream; ``live_only=False`` models the XLA
+    reference gather's full-block-table reads instead."""
     page: int
     n_seqs: int
     n_pages: int                     # allocated across the batch
@@ -106,26 +107,47 @@ class PagedKVTraffic:
 
 
 def kv_traffic_paged(cfg: ModelConfig, seq_lens, *, page: int = 16,
-                     kv_dtype_bits: int = 16) -> PagedKVTraffic:
+                     kv_dtype_bits: int = 16, live_only: bool = True,
+                     max_pages_per_seq: Optional[int] = None
+                     ) -> PagedKVTraffic:
     """KV traffic/residency for a batch of sequences in the paged pool.
 
     ``seq_lens`` are the current lengths (prompt + generated so far) of the
     active sequences; each contributes ceil(len/page) pages. SSM state (the
-    O(1) part of ``kv_bits_per_step``) is per-slot dense and not paged."""
+    O(1) part of ``kv_bits_per_step``) is per-slot dense and not paged.
+
+    ``live_only=True`` (default) charges the stream the page-table-aware
+    Pallas kernel (``kernels/paged_attention.py``) actually gathers —
+    live pages only, byte-for-byte (the DSE-vs-implementation contract
+    pinned by ``tests/test_memsys.py``). ``live_only=False`` widens the
+    per-step STREAM to the full block-table width (``max_pages_per_seq``
+    pages per lane, required then) — what the XLA reference gather in
+    ``models/attention.py`` materializes; the gap between the two is the
+    dead-page bandwidth the kernel saves. Residency fields
+    (``n_pages``/``resident_bits``/``utilization``) always describe the
+    live allocation — the gather path never changes what the pool holds.
+    """
     seq_lens = list(seq_lens)
+    if not live_only and max_pages_per_seq is None:
+        raise ValueError("live_only=False (full-width gather) needs "
+                         "max_pages_per_seq, the block-table width")
     n_pages = 0
-    bits = bits_exact = 0.0
+    live_bits = bits = bits_exact = 0.0
     for length in seq_lens:
         p = pages_for(length, page)
         n_pages += p
-        bits += kv_bits_per_step(cfg, p * page, kv_dtype_bits)
+        live_bits += kv_bits_per_step(cfg, p * page, kv_dtype_bits)
+        bits += kv_bits_per_step(
+            cfg, (p if live_only else max_pages_per_seq) * page,
+            kv_dtype_bits)
         bits_exact += kv_bits_per_step(cfg, int(length), kv_dtype_bits)
     # residency: decode streams the whole live cache each step, so one
-    # step's stream IS the resident KV at these lengths
+    # step's LIVE stream IS the resident KV at these lengths
     return PagedKVTraffic(page=page, n_seqs=len(seq_lens),
                           n_pages=n_pages, kv_bits_per_step=bits,
                           kv_bits_per_step_exact=bits_exact,
-                          resident_bits=bits, resident_bits_exact=bits_exact)
+                          resident_bits=live_bits,
+                          resident_bits_exact=bits_exact)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -162,7 +162,8 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
                cache: Optional[dict] = None,
                pos: Optional[jax.Array] = None,
                valid_len: Optional[jax.Array] = None,
-               tap=None, use_pallas: bool = False
+               tap=None, use_pallas: bool = False,
+               paged_attention: bool = False
                ) -> Tuple[jax.Array, Optional[dict]]:
     """Self-attention mixer. cache={'k','v'} [B,T,KV,D] (decode/prefill).
 
@@ -170,7 +171,13 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
     tightens the cache-validity mask when the input is right-padded to a
     bucket, and routes paged writes of padding garbage to the null page —
     required for suffix prefill at a nonzero start position, where padding
-    columns would otherwise scatter into the slot's live pages."""
+    columns would otherwise scatter into the slot's live pages.
+
+    ``paged_attention=True`` routes single-token paged decode through the
+    Pallas page-table-aware kernel (``kernels/paged_attention.py``), which
+    streams only live pages instead of materializing the full block-table
+    width; multi-token paged writes (suffix prefill) and geometries the
+    kernel cannot shard keep the XLA reference gather."""
     b, s, d_model = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     if tap:
@@ -201,11 +208,24 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
     elif "k_pages" in cache:                 # paged decode / suffix prefill
         new_cache = paged_cache_write(cache, k, v, positions,
                                       valid_len=valid_len)
+        valid = (valid_len if valid_len is not None
+                 else positions[:, -1] + 1)
+        if paged_attention and s == 1:
+            from repro.kernels.paged_attention import (paged_decode_attention,
+                                                       shard_compatible)
+            mesh = rctx.current_mesh()
+            if shard_compatible(mesh, cache["k_pages"].shape[0], nkv):
+                out = paged_decode_attention(
+                    q, new_cache, valid, n_kv=nkv, head_dim=hd,
+                    window=window, attn_softcap=cfg.attn_softcap,
+                    mesh=mesh)
+                if tap:
+                    tap("wo", out.reshape(b, s, nh * hd))
+                return linear(out.reshape(b, s, nh * hd), p["wo"],
+                              p.get("bo"), use_pallas, tp_dim=0), new_cache
         k_all, v_all = paged_cache_read(new_cache, x.dtype, nkv, hd)
         t_max = k_all.shape[1]
         kv_pos = jnp.broadcast_to(jnp.arange(t_max)[None, :], (b, t_max))
-        valid = (valid_len if valid_len is not None
-                 else positions[:, -1] + 1)
     else:
         t_max = cache["k"].shape[1]
         pos0 = 0 if s > 1 else (pos if pos is not None
@@ -324,9 +344,10 @@ def paged_cache_read(cache: dict, dtype, n_kv: int, hd: int):
     Returns k, v of shape ``[B, max_pages*page, n_kv, hd]``; entries past
     the sequence's valid length are garbage and masked by ``kv_valid_len``
     in ``attend``. Note this XLA reference gather materializes the FULL
-    block-table width (null-page repeats included); a page-table-aware
-    kernel streams only the live pages, which is the page-rounded traffic
-    ``memsys.workload.kv_traffic_paged`` charges the DSE."""
+    block-table width (null-page repeats included) — the
+    ``kv_traffic_paged(live_only=False)`` stream; the Pallas kernel
+    (``kernels/paged_attention.py``, ``paged_attention=True``) streams
+    only live pages, the ``live_only=True`` traffic the DSE charges."""
     tbl = cache["block_tbl"]                              # [B, P]
     b, p = tbl.shape
     page = cache["k_pages"].shape[1]

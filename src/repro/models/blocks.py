@@ -117,7 +117,8 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                 cache: Optional[dict] = None,
                 pos: Optional[jax.Array] = None,
                 valid_len: Optional[jax.Array] = None,
-                tap=None, use_pallas: bool = False
+                tap=None, use_pallas: bool = False,
+                paged_attention: bool = False
                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
     """Returns (x_out, new_cache, moe_aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
@@ -131,7 +132,8 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                              cache=cache.get("attn") if cache else None,
                              pos=pos, valid_len=valid_len,
                              tap=_sub(tap, "attn"),
-                             use_pallas=use_pallas)
+                             use_pallas=use_pallas,
+                             paged_attention=paged_attention)
         if ac is not None:
             new_cache["attn"] = ac
     elif kind == "mamba":
@@ -147,7 +149,8 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                                cache=cache.get("attn") if cache else None,
                                pos=pos, valid_len=valid_len,
                                tap=_sub(tap, "attn"),
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas,
+                               paged_attention=paged_attention)
         mix_m, mc = mamba_block(p["mamba"], h, cfg,
                                 cache=cache.get("mamba") if cache else None,
                                 valid_len=valid_len,

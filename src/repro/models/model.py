@@ -83,7 +83,7 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 # --------------------------------------------------------------------------
 def _apply_group(cfg: ModelConfig, grp_params, x, grp_cache, positions, pos,
                  xattn_params=None, enc_kv=None, valid_len=None, tap=None,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, paged_attention: bool = False):
     aux_total = jnp.zeros((), jnp.float32)
     new_cache = {}
     for i, kind in enumerate(cfg.pattern):
@@ -113,7 +113,8 @@ def _apply_group(cfg: ModelConfig, grp_params, x, grp_cache, positions, pos,
             x, nc, aux = B.apply_block(
                 bp, x, kind, cfg.moe_slots[i], cfg, positions=positions,
                 cache=bc, pos=pos, valid_len=valid_len,
-                tap=_tap_prefix(tap, f"b{i}"), use_pallas=use_pallas)
+                tap=_tap_prefix(tap, f"b{i}"), use_pallas=use_pallas,
+                paged_attention=paged_attention)
             new_cache[f"b{i}"] = nc
             aux_total = aux_total + aux
     any_cache = any(v is not None for v in new_cache.values())
@@ -180,7 +181,8 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
             valid_len: Optional[jax.Array] = None,
             taps: Optional[dict] = None,
             use_pallas: bool = False, scan_layers: bool = True,
-            remat: bool = False, skip_head: bool = False
+            remat: bool = False, skip_head: bool = False,
+            paged_attention: bool = False
             ) -> Tuple[jax.Array, Any, jax.Array]:
     """Returns (logits [B,S_text,V], new_cache, moe_aux).
 
@@ -216,7 +218,8 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
             pass
 
     grp = functools.partial(_apply_group, cfg, valid_len=valid_len,
-                            use_pallas=use_pallas)
+                            use_pallas=use_pallas,
+                            paged_attention=paged_attention)
     if remat:
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if cfg.remat_policy == "dots" else None)
@@ -273,7 +276,8 @@ def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
                       if cache is not None else None)
                 x, nc, a = _apply_group(
                     cfg, lp, x, lc, positions, pos, valid_len=valid_len,
-                    tap=_make_tap(taps, i), use_pallas=use_pallas)
+                    tap=_make_tap(taps, i), use_pallas=use_pallas,
+                    paged_attention=paged_attention)
                 aux_total = aux_total + a
                 ncs.append(nc)
             new_cache = (jax.tree_util.tree_map(lambda *ls: jnp.stack(ls),
@@ -365,9 +369,13 @@ def _encdec_cache_names(cache):
 
 def decode_step(cfg: ModelConfig, params, token: jax.Array, cache,
                 pos: jax.Array, *, use_pallas: bool = False,
-                scan_layers: bool = True):
-    """One token step. token [B,1]; pos scalar int32 (current position)."""
+                scan_layers: bool = True, paged_attention: bool = False):
+    """One token step. token [B,1]; pos scalar int32 (current position).
+
+    ``paged_attention=True``: paged caches attend through the Pallas
+    page-table kernel instead of the full-width XLA gather."""
     logits, new_cache, _ = forward(
         cfg, params, token, cache=cache, pos=pos,
-        use_pallas=use_pallas, scan_layers=scan_layers)
+        use_pallas=use_pallas, scan_layers=scan_layers,
+        paged_attention=paged_attention)
     return logits[:, -1], new_cache

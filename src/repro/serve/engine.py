@@ -55,6 +55,12 @@ class EngineStats:
     preemptions: int = 0
     pages_peak: int = 0
     tokens_discarded: int = 0        # emitted then erased by preemption
+    # per-step K/V gather work (page counts, summed over decode steps):
+    # `live` is what a page-table-aware kernel streams (ceil(seq/page) per
+    # active lane — the bytes kv_traffic_paged(live_only=True) charges);
+    # `full` is the block-table width the XLA reference gather reads
+    kv_pages_live: int = 0
+    kv_pages_full: int = 0
     # prefix cache (all zero when caching is off)
     prompt_tokens: int = 0           # prompt tokens across admissions
     prefill_tokens: int = 0          # tokens actually prefilled (suffixes)
@@ -128,6 +134,12 @@ class ServeEngine:
     copy still occupies a slot alias that slot's full prompt pages instead
     of prefilling them again — no radix index required.
 
+    ``paged_attention=True`` decodes through the Pallas page-table kernel
+    (``kernels/paged_attention.py``): each lane streams only its live
+    pages instead of the full block-table width — token-identical to the
+    reference gather under greedy decoding; ``EngineStats.kv_pages_live``
+    vs ``kv_pages_full`` records the gather-work gap either way.
+
     ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
     sharded: the arena's page axis over ``data``, attention heads / TP
     weight dims (including ShardedQTensor stream stacks) over ``model``.
@@ -142,7 +154,8 @@ class ServeEngine:
                  max_prefill_tokens: Optional[int] = None,
                  prefix_cache: bool = False, mesh=None,
                  step_set: Optional[serve_steps.PagedServeSteps] = None,
-                 inflight_dedup: Optional[bool] = None):
+                 inflight_dedup: Optional[bool] = None,
+                 paged_attention: bool = False):
         if cfg.is_encdec or cfg.n_vis_tokens:
             raise NotImplementedError(
                 "paged engine covers decoder-only models; use "
@@ -171,6 +184,7 @@ class ServeEngine:
                                    or max(512, bucket_len(max_len,
                                                           page_size)))
         self.stats = EngineStats()
+        self.paged_attention = paged_attention
         self._dedup = attn_only if inflight_dedup is None \
             else inflight_dedup
         if step_set is not None:
@@ -179,7 +193,8 @@ class ServeEngine:
                         page=self.page, n_pages=self.n_pages,
                         max_slots=slots,
                         max_pages_per_seq=self.max_pages_per_seq,
-                        cache_dtype=cache_dtype):
+                        cache_dtype=cache_dtype,
+                        paged_attention=paged_attention):
                 raise ValueError(
                     "step_set was built for a different engine geometry "
                     "(cfg/mesh/page/n_pages/slots/cache_dtype must match)")
@@ -201,7 +216,8 @@ class ServeEngine:
             self.cfg, self.mesh, p_struct, page=self.page,
             n_pages=self.n_pages, max_slots=self.slots,
             max_pages_per_seq=self.max_pages_per_seq,
-            cache_dtype=self.cache_dtype)
+            cache_dtype=self.cache_dtype,
+            paged_attention=self.paged_attention)
 
     def _ensure_pool(self) -> PagedKVPool:
         if self._pool is None:
@@ -429,7 +445,10 @@ class ServeEngine:
                     # the hit pinned its matched pages, which may be the
                     # very pages the capacity check promised as evictable;
                     # degrade to an uncached admission that can evict them
-                    ok = admit_miss(adm, s)
+                    # — but only if the FULL prefill (the hit was budgeted
+                    # for its suffix only) still fits the round budget
+                    ok = (sched.upgrade_budget(adm)
+                          and admit_miss(adm, s))
                 if not ok:          # promised pages vanished; retry later
                     sched.requeue_front(adm.req)
                     break
@@ -471,6 +490,12 @@ class ServeEngine:
                     preempt(s)      # yield to older slots; retry later
 
             ts = time.monotonic()
+            # gather-work accounting: this step attends seq = pos+1 per
+            # active lane (the token being written included)
+            act = [s for s in range(self.slots) if active[s] is not None]
+            self.stats.kv_pages_live += sum(
+                pages_for(int(pos[s]) + 1, self.page) for s in act)
+            self.stats.kv_pages_full += len(act) * self.max_pages_per_seq
             cache_in = pool.install_tables(self._arena)
             toks = jnp.asarray(next_tok[:, None].astype(np.int32))
             posv = jnp.asarray(pos.astype(np.int32))

@@ -18,10 +18,11 @@ multiple of the LPDDR5 burst (64 B bus transactions in
 ``memsys/devices.py``). The default ``page=16`` tokens keeps every
 per-head page a whole number of bursts for both the fp and int8 cache
 layouts; ``memsys.workload.kv_traffic_paged`` charges this page-rounded
-traffic — the live pages a block-table-aware attention kernel streams.
-(The CPU reference gather in ``models/attention.py`` materializes the
-full table width instead; the traffic model describes the target
-hardware path, not that XLA fallback.)
+traffic — the live pages the block-table-aware Pallas kernel
+(``kernels/paged_attention.py``, engine ``paged_attention=True``) really
+streams. (The XLA reference gather in ``models/attention.py``
+materializes the full table width instead — ``live_only=False`` in the
+traffic model.)
 
 Host-side metadata (free list, block tables, per-slot lengths) lives here;
 the device arena itself is an ordinary cache pytree built by
@@ -178,6 +179,10 @@ class PagedKVPool:
             raise PageAccountingError(
                 f"adopt into non-empty slot {slot}")
         for j, pid in enumerate(page_ids):
+            if pid == 0:
+                raise PageAccountingError(
+                    "adopt of the reserved null page 0 (would alias every "
+                    "inactive lane's scratch page into a live table)")
             self.retain(pid)
             self.slot_pages[slot].append(pid)
             self.block_tables[slot, j] = pid
@@ -241,11 +246,34 @@ class PagedKVPool:
                                    self.max_slots, self.max_pages_per_seq,
                                    self.cache_dtype)
 
+    def check_tables(self) -> None:
+        """Null-page aliasing guard: page 0 must never appear in a live
+        region of a block table, and every live region must mirror
+        ``slot_pages``. Until now only convention protected this — a
+        corrupted table would silently attend over null-page garbage (or
+        another sequence's KV). Raises :class:`PageAccountingError`
+        instead. O(max_slots * max_pages_per_seq) host ints per step."""
+        for s, pages in enumerate(self.slot_pages):
+            n = len(pages)
+            live = self.block_tables[s, :n]
+            if (live == 0).any() or live.tolist() != pages:
+                raise PageAccountingError(
+                    f"slot {s} block table {self.block_tables[s].tolist()} "
+                    f"diverged from its page map {pages} (null page in a "
+                    f"live region, or a stale/corrupted table)")
+            if self.block_tables[s, n:].any():
+                raise PageAccountingError(
+                    f"slot {s} maps pages beyond its {n} live entries: "
+                    f"{self.block_tables[s].tolist()}")
+
     def install_tables(self, arena, slot: Optional[int] = None):
         """Return arena with current block tables written into every group.
 
         ``slot`` narrows the tables to that one slot's row (batch 1) — the
-        view the paged suffix prefill runs against."""
+        view the paged suffix prefill runs against. Tables are validated
+        by :meth:`check_tables` on every install, so a corrupted mapping
+        raises before any step can attend over garbage."""
+        self.check_tables()
         tbl = self.device_tables(self.cfg.n_groups)
         if slot is not None:
             tbl = tbl[:, slot:slot + 1]

@@ -63,6 +63,7 @@ class Admission:
     cached_pages: List[int] = dataclasses.field(default_factory=list)
     cached_len: int = 0
     dedup: bool = False
+    first_in_round: bool = False     # budget-exempt (anti-deadlock rule)
 
     @property
     def suffix_start(self) -> int:
@@ -158,9 +159,31 @@ class FifoScheduler:
         if need > free_pages:
             return None
         self._round_budget -= padded
+        adm.first_in_round = self._round_first
         self._round_first = False
         self.queue.popleft()
         return adm
+
+    def upgrade_budget(self, adm: Admission) -> bool:
+        """Charge the degrade of a hit admission to a FULL prefill.
+
+        ``next_admission`` budgeted the hit for its suffix bucket only;
+        when the engine cannot honor the hit (its promised pages
+        vanished) and falls back to an uncached prefill, the difference
+        to the full-prompt bucket must still fit this round's budget —
+        otherwise a failed 16-token-suffix hit could silently burst a
+        1024-token prefill past ``max_prefill_tokens``, the exact decode
+        stall the budget bounds. Returns False when it does not fit (the
+        caller requeues; the round's first admission stays exempt, so a
+        long prompt can never deadlock)."""
+        full = bucket_len(len(adm.req.prompt), self.cfg.page)
+        suffix = bucket_len(len(adm.req.prompt) - adm.suffix_start,
+                            self.cfg.page)
+        extra = full - suffix
+        if not adm.first_in_round and extra > self._round_budget:
+            return False
+        self._round_budget -= extra
+        return True
 
     # ---- in-flight dedup (pending-prefill table) -----------------------
     @staticmethod

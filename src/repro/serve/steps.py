@@ -136,12 +136,15 @@ def _logits2d(mesh, batch: int, cfg) -> NamedSharding:
 
 
 @functools.lru_cache(maxsize=None)
-def contiguous_decode(cfg: ModelConfig) -> Callable:
+def contiguous_decode(cfg: ModelConfig,
+                      paged_attention: bool = False) -> Callable:
     """Single-device contiguous decode step (the legacy per-slot engine
 
     and the mesh-less paged engine share this executable): one jit per
-    ModelConfig (hashable frozen dataclass)."""
-    return jax.jit(lambda p, t, c, pos: _decode(cfg, p, t, c, pos))
+    (ModelConfig, paged_attention) — the flag only changes how paged
+    caches are read, contiguous caches trace identically."""
+    return jax.jit(lambda p, t, c, pos: _decode(
+        cfg, p, t, c, pos, paged_attention=paged_attention))
 
 
 # ==========================================================================
@@ -173,13 +176,16 @@ class PagedServeSteps:
     suffix_prefill: Callable
     adopt: Callable
     page_copy: Callable
+    paged_attention: bool = False    # decode via the Pallas paged kernel
 
     def compatible_with(self, *, page, n_pages, max_slots,
-                        max_pages_per_seq, cache_dtype) -> bool:
+                        max_pages_per_seq, cache_dtype,
+                        paged_attention=False) -> bool:
         return (self.page == page and self.n_pages == n_pages
                 and self.max_slots == max_slots
                 and self.max_pages_per_seq == max_pages_per_seq
-                and self.cache_dtype == cache_dtype)
+                and self.cache_dtype == cache_dtype
+                and self.paged_attention == paged_attention)
 
 
 def default_n_pages(slots: int, max_pages_per_seq: int, mesh=None) -> int:
@@ -251,7 +257,8 @@ def _contig_prefill_cache_shardings(cfg: ModelConfig, mesh,
 def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
                       page: int, n_pages: int, max_slots: int,
                       max_pages_per_seq: int,
-                      cache_dtype=jnp.float32) -> PagedServeSteps:
+                      cache_dtype=jnp.float32,
+                      paged_attention: bool = False) -> PagedServeSteps:
     """Build the full paged serving step set for one engine geometry.
 
     ``mesh=None`` → plain single-device jit (lru-shared per config where
@@ -261,13 +268,21 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     constraints) and carries explicit input/output shardings per the
     module-level contract; ``params_struct`` (a pytree of
     ShapeDtypeStructs matching the serving weights) is then required.
+
+    ``paged_attention=True`` builds the decode step over the Pallas
+    page-table kernel (``kernels/paged_attention.py``): only live pages
+    stream per lane. Under a mesh the kernel runs shard-local (pages over
+    ``data``, KV heads over ``model``, flash-decoding softmax merge) —
+    the arena geometry must divide the mesh (``shard_compatible``), which
+    ``default_n_pages`` guarantees for the page axis; unsupported
+    geometries fall back to the XLA gather inside the traced step.
     """
     if mesh is None:
         return PagedServeSteps(
             cfg=cfg, mesh=None, page=page, n_pages=n_pages,
             max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
-            cache_dtype=cache_dtype,
-            decode=contiguous_decode(cfg),
+            cache_dtype=cache_dtype, paged_attention=paged_attention,
+            decode=contiguous_decode(cfg, paged_attention),
             prefill=_bucketed_prefill_jit(cfg, cache_dtype),
             suffix_prefill=_suffix_prefill_jit(cfg),
             adopt=_adopt_jit(cfg, page),
@@ -298,7 +313,8 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
 
     def decode_fn(params, token, arena, pos):
         with ctx.use_mesh(mesh, dp):
-            return _decode(cfg, params, token, arena, pos)
+            return _decode(cfg, params, token, arena, pos,
+                           paged_attention=paged_attention)
 
     def prefill_fn(params, tokens, valid_len):
         with ctx.use_mesh(mesh, dp):
@@ -311,7 +327,7 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     return PagedServeSteps(
         cfg=cfg, mesh=mesh, page=page, n_pages=n_pages,
         max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
-        cache_dtype=cache_dtype,
+        cache_dtype=cache_dtype, paged_attention=paged_attention,
         decode=jax.jit(decode_fn,
                        in_shardings=(p_sh, tok_sh, a_sh, b_sh),
                        out_shardings=(l2_sh, a_sh),

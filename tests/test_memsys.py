@@ -1,4 +1,7 @@
-"""Memory co-design simulator tests: Eq. 3/4 semantics + paper ratios."""
+"""Memory co-design simulator tests: Eq. 3/4 semantics + paper ratios,
+plus the DSE-vs-implementation consistency check: the bytes
+``kv_traffic_paged(live_only=True)`` charges equal the paged-attention
+kernel's actual per-step K/V gather volume for a scripted workload."""
 import pytest
 
 from repro.configs import get_config
@@ -73,6 +76,62 @@ def test_external_transfer_reduction(hymba):
     q3 = evaluate_hetero(make_traffic(hymba, "qmc", seq_len=512), sys_cfg)
     ratio = t16.external_bits / q3.external_bits
     assert 6.0 < ratio < 8.0
+
+
+@pytest.mark.kernel
+def test_kv_traffic_live_only_matches_kernel_gather(serve_cfg,
+                                                    serve_params):
+    """The consistency test the ROADMAP kept deferring: the Eq. (3)/(4)
+    DSE's ``live_only=True`` page charge must equal what the serving
+    implementation actually streams per decode step — counted by the
+    engine as it drives the Pallas kernel over a scripted workload —
+    while ``live_only=False`` reproduces the reference gather's
+    full-block-table width."""
+    import numpy as np
+    from repro.memsys.workload import kv_traffic_paged, pages_for
+    from repro.serve.engine import Request, ServeEngine
+
+    page, max_new = 8, 5
+    prompt_lens = [4, 9, 16]                  # sub-page / ragged / aligned
+    rng = np.random.default_rng(11)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        2, serve_cfg.vocab, L).astype(np.int32), max_new_tokens=max_new)
+        for i, L in enumerate(prompt_lens)]
+    eng = ServeEngine(serve_cfg, serve_params, slots=4, max_len=32,
+                      page_size=page, paged_attention=True)
+    eng.run(reqs)
+    assert all(len(r.out_tokens) == max_new for r in reqs)
+
+    # script the same workload: all 3 admit together, each runs
+    # max_new - 1 decode steps (token 1 comes from prefill) at
+    # seq = prompt + 1 + t. Charge each step with the DSE.
+    from repro.memsys.workload import kv_bits_per_step
+    live = full = 0
+    live_bits = 0.0
+    for t in range(max_new - 1):
+        lens = [L + 1 + t for L in prompt_lens]
+        traffic = kv_traffic_paged(serve_cfg, lens, page=page)
+        assert traffic.n_pages == sum(pages_for(n, page) for n in lens)
+        live += traffic.n_pages
+        live_bits += traffic.kv_bits_per_step
+        wide = kv_traffic_paged(serve_cfg, lens, page=page,
+                                live_only=False,
+                                max_pages_per_seq=eng.max_pages_per_seq)
+        # full width only changes the STREAM; residency stays live
+        assert wide.kv_bits_per_step == pytest.approx(
+            len(lens) * kv_bits_per_step(
+                serve_cfg, eng.max_pages_per_seq * page))
+        assert wide.n_pages == traffic.n_pages
+        assert wide.resident_bits == pytest.approx(traffic.resident_bits)
+        full += len(lens) * eng.max_pages_per_seq
+    # page-for-page agreement between the DSE account and the engine's
+    # instrumented kernel gather (and the reference full-width read)
+    assert eng.stats.kv_pages_live == live
+    assert eng.stats.kv_pages_full == full
+    assert live_bits > 0 and live < full
+
+    with pytest.raises(ValueError):
+        kv_traffic_paged(serve_cfg, [8], page=page, live_only=False)
 
 
 def test_system_gains_order(hymba):

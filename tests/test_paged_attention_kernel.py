@@ -1,0 +1,182 @@
+"""Differential harness for the Pallas paged-attention decode kernel.
+
+Parity sweep of ``kernels/paged_attention.py`` (interpret mode — the real
+kernel body runs on CPU) against the XLA reference path
+(``paged_cache_read`` + ``attend``) across page sizes, GQA ratios, KV
+dtypes and ragged per-lane lengths (len 0 / len < page / page-boundary /
+parked-on-null-page lanes), plus a hypothesis property: permuting which
+physical arena pages hold the data (and the block tables with them) is
+output-invariant, bit for bit. Also pins the null-page aliasing guard:
+a corrupted block table raises instead of silently attending garbage.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import SERVE_BASE, make_paged_case, paged_reference
+from repro.kernels.paged_attention import (paged_decode_attention,
+                                           shard_compatible)
+from repro.models.config import ModelConfig
+from repro.serve.paged_kv import PageAccountingError, PagedKVPool
+
+CFG = ModelConfig(name="t", family="dense", **SERVE_BASE)
+N_KV, HD = 2, 16
+TOL = dict(atol=3e-6, rtol=3e-6)
+
+
+def _seqs(page):
+    """Ragged lengths: parked lane (0), sub-page, page-boundary, boundary
+    +/- 1, and a multi-page tail."""
+    return (0, 1, page - 1, page, page + 1, 2 * page, 3 * page)
+
+
+def _run(q, cache, seq, **kw):
+    return paged_decode_attention(q, cache, seq, n_kv=N_KV, head_dim=HD,
+                                  **kw)
+
+
+# -------------------------------------------------------------------------
+# the parity sweep
+# -------------------------------------------------------------------------
+@pytest.mark.kernel
+@pytest.mark.parametrize("quantized", [False, True], ids=["fp32", "int8kv"])
+@pytest.mark.parametrize("gqa", [1, 2, 4])
+@pytest.mark.parametrize("page", [8, 16])
+def test_kernel_matches_reference_gather(page, gqa, quantized):
+    rng = np.random.default_rng(page * 10 + gqa + quantized)
+    q, cache, seq = make_paged_case(rng, page=page, n_kv=N_KV, gqa=gqa,
+                                    hd=HD, quantized=quantized,
+                                    seq_lens=_seqs(page))
+    out = _run(q, cache, seq)
+    ref = paged_reference(q, cache, seq, n_kv=N_KV, hd=HD)
+    act = np.asarray(seq) > 0
+    np.testing.assert_allclose(np.asarray(out)[act], np.asarray(ref)[act],
+                               **TOL)
+    # parked lanes (all-null table, seq 0) emit exactly zero — they never
+    # see the poisoned null page the reference averages garbage over
+    assert np.all(np.asarray(out)[~act] == 0.0)
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("window,softcap", [(4, None), (None, 30.0),
+                                            (4, 30.0)])
+def test_kernel_window_and_softcap(window, softcap):
+    rng = np.random.default_rng(17)
+    q, cache, seq = make_paged_case(rng, page=8, gqa=2, hd=HD,
+                                    seq_lens=_seqs(8))
+    out = _run(q, cache, seq, window=window, attn_softcap=softcap)
+    ref = paged_reference(q, cache, seq, n_kv=N_KV, hd=HD, window=window,
+                          attn_softcap=softcap)
+    act = np.asarray(seq) > 0
+    np.testing.assert_allclose(np.asarray(out)[act], np.asarray(ref)[act],
+                               **TOL)
+
+
+@pytest.mark.kernel
+def test_kernel_rejects_multi_token_queries():
+    rng = np.random.default_rng(3)
+    q, cache, seq = make_paged_case(rng, page=8, gqa=2, hd=HD,
+                                    seq_lens=(8, 16))
+    q2 = jnp.concatenate([q, q], axis=1)            # S=2: prefill shape
+    with pytest.raises(ValueError):
+        _run(q2, cache, seq)
+
+
+# -------------------------------------------------------------------------
+# hypothesis: physical page placement is invisible
+# -------------------------------------------------------------------------
+@pytest.mark.kernel
+def test_block_table_permutation_invariance():
+    pytest.importorskip(
+        "hypothesis", reason="property test needs hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    rng = np.random.default_rng(23)
+    q, cache, seq = make_paged_case(rng, page=8, gqa=2, hd=HD,
+                                    seq_lens=_seqs(8))
+    base = np.asarray(_run(q, cache, seq))
+    n_pages = cache["k_pages"].shape[0]
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.permutations(list(range(1, n_pages))))
+    def check(perm):
+        # relocate page i -> mapping[i] (null page 0 stays put) and
+        # rewrite the tables to match: outputs must be bit-identical
+        mapping = np.concatenate([[0], np.asarray(perm)])
+        inv = np.argsort(mapping)
+        moved = {"block_tbl": jnp.asarray(
+            mapping[np.asarray(cache["block_tbl"])])}
+        for name, leaf in cache.items():
+            if name.endswith("_pages"):
+                moved[name] = jnp.asarray(np.asarray(leaf)[inv])
+        out = np.asarray(_run(q, moved, seq))
+        np.testing.assert_array_equal(out, base)
+
+    check()
+
+
+# -------------------------------------------------------------------------
+# null-page aliasing guard (host-side): corruption is loud, not silent
+# -------------------------------------------------------------------------
+def _pool(**kw):
+    return PagedKVPool(CFG, n_pages=8, page=8, max_slots=2,
+                       max_pages_per_seq=4, **kw)
+
+
+def test_corrupted_table_null_in_live_region_raises():
+    pool = _pool()
+    pool.ensure(0, 20)                               # 3 live pages
+    pool.block_tables[0, 1] = 0                      # corrupt: null aliased
+    with pytest.raises(PageAccountingError):
+        pool.check_tables()
+    with pytest.raises(PageAccountingError):         # guard runs on every
+        pool.install_tables(pool.init_arena())       # table install
+
+
+def test_corrupted_table_stale_tail_raises():
+    pool = _pool()
+    pool.ensure(0, 10)                               # 2 live pages
+    pool.block_tables[0, 3] = 5                      # ghost page past live
+    with pytest.raises(PageAccountingError):
+        pool.check_tables()
+
+
+def test_corrupted_table_swapped_mapping_raises():
+    pool = _pool()
+    a = pool.ensure(0, 10)
+    b = pool.ensure(1, 10)
+    pool.block_tables[0, 0] = b[0]                   # points at slot 1's KV
+    with pytest.raises(PageAccountingError):
+        pool.check_tables()
+    assert a[0] != b[0]
+
+
+def test_adopt_rejects_null_page():
+    pool = _pool()
+    pool.ensure(0, 10)
+    with pytest.raises(PageAccountingError):
+        pool.adopt(1, [0])
+
+
+def test_clean_tables_pass():
+    pool = _pool()
+    pool.ensure(0, 20)
+    pool.ensure(1, 5)
+    pool.check_tables()                              # no raise
+    pool.free_slot(0)
+    pool.check_tables()
+
+
+# -------------------------------------------------------------------------
+# mesh gate: geometries the shard-local kernel cannot honor are refused
+# -------------------------------------------------------------------------
+def test_shard_compatible_gate():
+    class _Mesh:
+        axis_names = ("data", "model")
+        devices = np.empty((2, 2), dtype=object)
+    assert shard_compatible(None, 33, 2)             # 1-device: anything
+    assert shard_compatible(_Mesh(), 32, 2)          # 32 % 2, 2 % 2
+    assert not shard_compatible(_Mesh(), 33, 2)      # pages don't divide
+    assert not shard_compatible(_Mesh(), 32, 3)      # heads don't divide

@@ -11,7 +11,7 @@ from repro.models.model import init_params
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged_kv import PageAccountingError, PagedKVPool
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import FifoScheduler, SchedulerConfig
+from repro.serve.scheduler import Admission, FifoScheduler, SchedulerConfig
 
 BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
             vocab=64)
@@ -24,14 +24,19 @@ CFG_HYBRID = ModelConfig(name="th", family="hybrid", pattern=("hybrid",),
 PAGE = 8
 
 
+# params are the session-scoped conftest fixtures (CFG/CFG_INT8 equal the
+# conftest configs field-for-field, so the cached weights match) — shared
+# with tests/test_paged_attention_kernel.py
 @pytest.fixture(scope="module")
-def params():
-    return init_params(CFG, jax.random.PRNGKey(0))
+def params(serve_cfg, serve_params):
+    assert serve_cfg == CFG
+    return serve_params
 
 
 @pytest.fixture(scope="module")
-def params_int8():
-    return init_params(CFG_INT8, jax.random.PRNGKey(0))
+def params_int8(serve_cfg_int8, serve_params_int8):
+    assert serve_cfg_int8 == CFG_INT8
+    return serve_params_int8
 
 
 def _pool(n_pages=16, max_slots=4, max_pages=8):
@@ -347,6 +352,31 @@ def test_choose_victim_breaks_stamp_ties_by_slot_id():
     assert sched.choose_victim(1) is None            # no younger slot
 
 
+def test_degraded_hit_respects_round_budget():
+    """A hit admission is budgeted for its suffix bucket only; when the
+    engine degrades it to a full uncached prefill, the difference must
+    re-pass the round budget — except for the round's first admission
+    (the anti-deadlock exemption ``next_admission`` already grants)."""
+    class _Req:
+        prompt = np.zeros(64, np.int32)
+
+    sched = FifoScheduler(SchedulerConfig(page=PAGE,
+                                          max_prefill_tokens=32))
+    sched.start_round()
+    sched._round_first = False                       # earlier admission
+    sched._round_budget = 16
+    adm = Admission(req=_Req(), cached_len=56)       # suffix bucket = 8
+    assert sched.upgrade_budget(adm) is False        # extra 56 > 16 left
+    assert sched._round_budget == 16                 # nothing charged
+    first = Admission(req=_Req(), cached_len=56, first_in_round=True)
+    assert sched.upgrade_budget(first) is True       # exempt, charged
+    assert sched._round_budget == 16 - (64 - 8)
+    sched._round_budget = 64
+    fits = Admission(req=_Req(), cached_len=56)
+    assert sched.upgrade_budget(fits) is True
+    assert sched._round_budget == 64 - 56
+
+
 # -------------------------------------------------------------------------
 # memsys DSE hook: prefill-write credit for cache hits
 # -------------------------------------------------------------------------
@@ -379,6 +409,47 @@ def test_kv_traffic_prefix_accounting():
         t.kv_bits_per_step + t.prefill_write_bits / (3 * 64))
     with pytest.raises(ValueError):
         kv_traffic_prefix(CFG, [16], [9], page=page)  # partial-page cached
+
+
+# -------------------------------------------------------------------------
+# Pallas paged-attention kernel: end-to-end greedy parity (PR-4 tentpole).
+# The kernel streams only live pages; the reference engine gathers the
+# full block-table width — greedy decode must not see the difference.
+# -------------------------------------------------------------------------
+@pytest.mark.kernel
+@pytest.mark.parametrize("prefix", [False, True], ids=["nocache", "prefix"])
+@pytest.mark.parametrize("cfg_name", ["fp32", "int8"])
+def test_paged_attention_engine_parity(cfg_name, prefix, params,
+                                       params_int8):
+    cfg = CFG if cfg_name == "fp32" else CFG_INT8
+    p = params if cfg_name == "fp32" else params_int8
+    reqs = _tenant_requests(n=5, sys_len=24)
+    ref = _clone(reqs)
+    ServeEngine(cfg, p, slots=3, max_len=64, page_size=PAGE,
+                prefix_cache=prefix).run(ref)
+    ker = _clone(reqs)
+    eng = ServeEngine(cfg, p, slots=3, max_len=64, page_size=PAGE,
+                      prefix_cache=prefix, paged_attention=True)
+    eng.run(ker)
+    assert [r.out_tokens for r in ref] == [r.out_tokens for r in ker]
+    assert all(r.done for r in ker)
+    # the kernel path really did less gather work than full width
+    s = eng.stats
+    assert 0 < s.kv_pages_live < s.kv_pages_full
+    if prefix:
+        assert s.cache_hits >= 4          # followers still hit the index
+
+
+def test_paged_attention_step_set_compat(params):
+    """A step set built without the kernel cannot serve an engine that
+    asks for it (and vice versa) — the flag is part of the geometry."""
+    from repro.serve import steps as serve_steps
+    step_set = serve_steps.build_paged_steps(
+        CFG, None, page=PAGE, n_pages=32, max_slots=4,
+        max_pages_per_seq=8)
+    with pytest.raises(ValueError):
+        ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE,
+                    n_pages=32, step_set=step_set, paged_attention=True)
 
 
 # refcount-invariant property tests live in
