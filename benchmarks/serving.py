@@ -30,8 +30,9 @@ import numpy as np
 
 from repro.core.qconfig import QMCConfig
 from repro.core.serving_quant import quantize_for_serving
-from repro.memsys.workload import (kv_traffic_paged, kv_traffic_prefix,
-                                   make_traffic, shard_serve_traffic)
+from repro.memsys.workload import (kv_traffic_chunked, kv_traffic_paged,
+                                   kv_traffic_prefix, make_traffic,
+                                   shard_serve_traffic)
 from repro.models.config import ModelConfig
 from repro.models.model import init_params
 from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
@@ -125,6 +126,7 @@ def run() -> dict:
         "slots": {str(s): _measure_prefix(params, s) for s in (4, 8)}}
     results["weights"] = _measure_weights(params)
     results["paged_attention"] = _measure_paged_attention(params)
+    results["chunked_prefill"] = _measure_chunked(params)
     results["sharded"] = _measure_sharded()
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
@@ -254,6 +256,76 @@ def _measure_paged_attention(params) -> dict:
           f"parity={out['token_parity']} "
           f"live_pages={s.kv_pages_live}/{s.kv_pages_full} "
           f"({1 - out['gather_work']['live_fraction']:.0%} gather saved)")
+    return out
+
+
+CHUNK = 16
+
+
+def _mixed_requests(seed: int = 17):
+    """Long-prompt + short-decode interactive mix: the workload where
+    monolithic prefill stalls in-flight decodes (TTFT/ITL jitter)."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(N_REQ):
+        long_ = i % 4 == 0                 # every 4th request: long prompt
+        L = 44 if long_ else int(rng.integers(4, 10))
+        reqs.append(Request(
+            uid=i, prompt=rng.integers(2, CFG.vocab, L).astype(np.int32),
+            max_new_tokens=MAX_NEW))
+    return reqs
+
+
+def _measure_chunked(params) -> dict:
+    """Chunked vs monolithic prefill through the ONE ragged step.
+
+    Both modes run the same unified step (ragged Pallas kernel); only the
+    chunk width differs — monolithic covers any prompt in one chunk,
+    chunked splits long prompts so decode lanes keep emitting between
+    chunks. Reports TTFT and ITL p50/p95 for the mixed workload, the
+    live-gather page counts the prefill chunks streamed (engine counters)
+    and the matching chunk-granular Eq. (3)/(4) DSE account."""
+    out = {}
+    toks = {}
+    for label, chunk in (("monolithic", None), ("chunked", CHUNK)):
+        ServeEngine(CFG, params, slots=4, max_len=MAX_LEN, page_size=PAGE,
+                    chunk_tokens=chunk, paged_attention=True).run(
+            _mixed_requests())         # warm-up pays the jit compiles
+        eng = ServeEngine(CFG, params, slots=4, max_len=MAX_LEN,
+                          page_size=PAGE, chunk_tokens=chunk,
+                          paged_attention=True)
+        res = eng.run(_mixed_requests())
+        s = eng.stats
+        ttft50, ttft95 = _pcts(s.ttft_s)
+        itl50, itl95 = _pcts(s.per_token_latencies())
+        toks[label] = [r.out_tokens for r in res]
+        out[label] = {
+            "tokens": sum(len(r.out_tokens) for r in res),
+            "tokens_per_s": s.tokens_per_s,
+            "prefill_chunks": s.prefill_chunks,
+            "ttft_p50_us": ttft50 * 1e6, "ttft_p95_us": ttft95 * 1e6,
+            "itl_p50_us": itl50 * 1e6, "itl_p95_us": itl95 * 1e6,
+            "prefill_kv_pages_live": s.prefill_kv_pages_live,
+            "prefill_kv_pages_written": s.prefill_kv_pages_written}
+    out["token_parity"] = toks["monolithic"] == toks["chunked"]
+    # chunk-granular DSE view of the same prompts (page-for-page with the
+    # engine counters — pinned by tests/test_memsys.py)
+    lens = [len(r.prompt) for r in _mixed_requests()]
+    t_chunk = [kv_traffic_chunked(CFG, L, chunk=CHUNK, page=PAGE)
+               for L in lens]
+    out["dse"] = {
+        "kv_pages_read": sum(t.kv_pages_read for t in t_chunk),
+        "kv_pages_written": sum(t.kv_pages_written for t in t_chunk),
+        "kv_pages_read_monolithic": sum(t.kv_pages_read_monolithic
+                                        for t in t_chunk),
+        "prefill_kv_bits": sum(t.kv_read_bits + t.kv_write_bits
+                               for t in t_chunk)}
+    print(f"serving/chunked_prefill_c{CHUNK},"
+          f"{out['chunked']['itl_p95_us']:.0f},"
+          f"parity={out['token_parity']} "
+          f"ttft_p95={out['chunked']['ttft_p95_us']:.0f}us"
+          f"(mono {out['monolithic']['ttft_p95_us']:.0f}us) "
+          f"chunk_pages={out['chunked']['prefill_kv_pages_live']}")
     return out
 
 

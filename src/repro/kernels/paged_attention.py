@@ -1,39 +1,56 @@
-"""Pallas TPU kernel: paged decode attention over the serving KV arena.
+"""Pallas TPU kernel: ragged paged attention over the serving KV arena.
 
-The serving hot path's XLA reference gather (``models.attention.
-paged_cache_read``) materializes the FULL block-table width for every
-decode lane — compute and on-chip residency scale with ``max_pages`` even
-when a lane holds one live page. This kernel consumes the paged arena +
-block tables directly and streams only live pages, which is exactly the
-page-granular LPDDR5 traffic ``memsys.workload.kv_traffic_paged``
-(``live_only=True``) charges the Eq. (3)/(4) DSE.
+ONE kernel serves every attention step the paged engine runs: batched
+decode (one query token per lane), chunked prefill (a block of query
+tokens per lane, scattered straight into the arena first) and the mixed
+rounds where both co-schedule in the same jit step. The XLA reference
+gather (``models.attention.paged_cache_read``) materializes the FULL
+block-table width for every lane — it survives only as the differential
+oracle and the fallback for geometries the kernel cannot shard; all
+serving traffic streams through here, which is exactly the page-granular
+LPDDR5 traffic ``memsys.workload`` (``kv_traffic_paged`` for decode,
+``kv_traffic_chunked`` for prefill chunks) charges the Eq. (3)/(4) DSE.
 
 Grid / BlockSpec contract
 -------------------------
-  * Grid ``(B, KV, P)`` — batch lane x KV head x block-table slot, with
-    the page axis innermost so the online-softmax scratch accumulates
-    across one lane-head's pages before moving on.
+  * Grid ``(B, KV, QB, P)`` — batch lane x KV head x **q block** x
+    block-table slot. The q-block axis is the multi-query extension: each
+    lane's ``S`` query tokens are split into ``QB = ceil(S/q_blk)``
+    blocks of ``q_blk`` rows. The page axis stays innermost so the
+    online-softmax scratch accumulates one (lane, head, q-block)'s pages
+    before moving on.
+  * Queries are ragged: lane ``b``'s queries sit at absolute positions
+    ``q_start[b] + t`` (``t < S``) and attend KV positions
+    ``<= q_start[b] + t`` that are ``< kv_len[b]`` — causal masking at
+    intra-page granularity, so a chunk attends the pages it just wrote
+    plus every earlier page, exactly like one-shot prefill. Query rows at
+    positions ``>= kv_len`` (right padding of a short chunk, or a lane
+    idling in a mixed round with ``n_new = 0``) emit exactly 0.
   * The arena is viewed as ``[n_pages, page, KV, hd]`` (plus
-    ``[n_pages, page, KV]`` scales for the int8 layout). Per grid step the
-    BlockSpec index map does a data-dependent fetch of ONE page of ONE KV
-    head: block ``(1, page, 1, hd)`` at row ``tbl[b, p]`` — the
-    ``PrefetchScalarGridSpec`` scalar-prefetch mechanism, same as
-    ``kernels/qmm.py``'s stream routing.
-  * Scalar prefetch operands: ``tbl [B, P]`` (block tables), ``seq [B]``
-    (valid KV length per lane, i.e. decode position + 1) and
-    ``meta = [page_offset, n_local_pages]`` (shard-local page-id window;
-    ``[0, n_pages]`` on a single device).
-  * Dead or out-of-shard table slots are remapped to arena row 0 by the
-    index map (never a live page — row 0 is the reserved null page) and
-    fully masked in the body, so they contribute nothing and cost no
-    live-page stream: per-step gather work is ``sum_b ceil(seq_b/page)``
-    pages, not ``B * P``.
-  * Online softmax (flash-style running max / sum) keeps exactly one page
-    of K/V resident per step; GQA query groups ride along as the ``G``
-    rows of each block. int8-KV dequant (per-page-slot, per-head scales
-    from ``models.kvcache.quantize_kv``'s layout) is fused before the dot.
-  * Outputs: normalized ``o [B, KV, G, hd]`` plus the running ``(m, l)``
-    softmax state — the state is what makes the kernel mesh-composable:
+    ``[n_pages, page, KV]`` scales for the int8 layout). Per grid step
+    the BlockSpec index map does a data-dependent fetch of ONE page of
+    ONE KV head at row ``tbl[b, p]`` — the ``PrefetchScalarGridSpec``
+    scalar-prefetch mechanism, same as ``kernels/qmm.py``'s stream
+    routing.
+  * Scalar prefetch operands: ``tbl [B, P]`` (block tables), ``q_start
+    [B]``, ``kv_len [B]`` and ``meta = [page_offset, n_local_pages]``
+    (shard-local page-id window; ``[0, n_pages]`` on a single device).
+  * Dead, causally-future, out-of-shard or padding-only fetches are
+    remapped to arena row 0 by the index map (never a live page — row 0
+    is the reserved null page) and fully masked in the body: q block
+    ``qb`` streams page ``p`` only when the block holds a valid query
+    (``q_start + qb*q_blk < kv_len``) and the page is causally visible
+    to it (``p*page < min(kv_len, q_start + (qb+1)*q_blk)``). Per-lane
+    gather work is what ``memsys.workload.chunk_pages_streamed`` counts
+    — for decode (``S = 1``) that collapses to ``ceil(kv_len/page)``
+    pages, never ``B * P``.
+  * Online softmax (flash-style running max / sum) keeps exactly one
+    page of K/V resident per step; GQA query groups ride along as extra
+    block rows (``q_blk * G`` rows per q block). int8-KV dequant
+    (per-page-slot, per-head scales from ``models.kvcache.quantize_kv``)
+    is fused before the dot.
+  * Outputs: normalized ``o`` plus the running ``(m, l)`` softmax state
+    per query row — the state is what makes the kernel mesh-composable:
     under the PR-3 sharding contract the arena's page axis shards over
     ``data``, so each shard runs the kernel over its own page slice and
     the partial ``(o, m, l)`` triples merge with a flash-decoding-style
@@ -44,8 +61,8 @@ Grid / BlockSpec contract
 ``interpret=True`` (the default off-TPU) executes the real kernel body on
 CPU, so CI runs the same code path the TPU backend compiles. Block shapes
 follow the problem geometry rather than the (8/16/32, 128) MXU tiles —
-fine in interpret mode; a production TPU build would pad ``G``/``hd`` up
-to the dtype's native tile.
+fine in interpret mode; a production TPU build would pad ``q_blk * G`` /
+``hd`` up to the dtype's native tile.
 """
 from __future__ import annotations
 
@@ -59,6 +76,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.launch.mesh import axis_size as _mesh_axis
 
+# default q-block rows per grid step; mirrored by the host-side stream
+# accounting (memsys.workload.chunk_pages_streamed and the engine's
+# prefill_kv_pages_live counter), which must stay page-for-page with the
+# index map below
+Q_BLOCK = 16
+
 
 def _on_tpu() -> bool:
     try:
@@ -70,13 +93,14 @@ def _on_tpu() -> bool:
 # ---------------------------------------------------------------------------
 # kernel body
 # ---------------------------------------------------------------------------
-def _accumulate(tbl_ref, seq_ref, meta_ref, q_ref, k_ref, v_ref,
+def _accumulate(tbl_ref, qs_ref, kl_ref, meta_ref, q_ref, k_ref, v_ref,
                 ks_ref, vs_ref, o_ref, mo_ref, lo_ref,
-                acc_ref, m_ref, l_ref, *, page: int,
+                acc_ref, m_ref, l_ref, *, page: int, q_blk: int, g: int,
                 window: Optional[int], attn_softcap: Optional[float],
                 scale: float):
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    qb = pl.program_id(2)
+    p = pl.program_id(3)
 
     @pl.when(p == 0)
     def _init():
@@ -84,34 +108,40 @@ def _accumulate(tbl_ref, seq_ref, meta_ref, q_ref, k_ref, v_ref,
         m_ref[...] = jnp.full_like(m_ref, -1e30)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    seq = seq_ref[b]
+    kl = kl_ref[b]
+    qs = qs_ref[b]
     local = tbl_ref[b, p] - meta_ref[0]
     owned = (local >= 0) & (local < meta_ref[1])
-    live = (p * page) < seq
+    limit = jnp.minimum(kl, qs + (qb + 1) * q_blk)
+    live = ((p * page) < limit) & (qs + qb * q_blk < kl)
 
-    qs = q_ref[0, 0].astype(jnp.float32) * scale           # [G, hd]
+    q = q_ref[0, 0, :, 0].astype(jnp.float32) * scale      # [q_blk, G, hd]
+    q2 = q.reshape(q_blk * g, q.shape[-1])
     k = k_ref[0, :, 0, :].astype(jnp.float32)              # [page, hd]
     v = v_ref[0, :, 0, :].astype(jnp.float32)
     if ks_ref is not None:                                 # fused dequant
         k = k * ks_ref[0, :, 0].astype(jnp.float32)[:, None]
         v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
 
-    scores = jax.lax.dot_general(qs, k, (((1,), (1,)), ((), ())),
+    scores = jax.lax.dot_general(q2, k, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
     if attn_softcap:
         scores = attn_softcap * jnp.tanh(scores / attn_softcap)
 
-    pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
-    mask = (pos < seq) & owned & live                      # [1, page]
+    # row r of the block is query token r // g (GQA groups interleave)
+    tok = jax.lax.broadcasted_iota(jnp.int32, (q_blk * g, 1), 0) // g
+    pos_q = qs + qb * q_blk + tok                          # [q_blk*g, 1]
+    pos_k = p * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    mask = (pos_k <= pos_q) & (pos_k < kl) & (pos_q < kl) & owned & live
     if window is not None:
-        mask = mask & ((seq - 1) - pos < window)
+        mask = mask & (pos_q - pos_k < window)
     scores = jnp.where(mask, scores, -1e30)
 
-    cm = jnp.max(scores, axis=-1, keepdims=True)           # [G, 1]
+    cm = jnp.max(scores, axis=-1, keepdims=True)           # [q_blk*g, 1]
     m_new = jnp.maximum(m_ref[...], cm)
     # probs masked explicitly: with every score at -1e30 AND m still at
-    # its -1e30 init (a fully dead lane) exp(score - m_new) would be 1
-    probs = jnp.where(mask, jnp.exp(scores - m_new), 0.0)  # [G, page]
+    # its -1e30 init (a fully dead row) exp(score - m_new) would be 1
+    probs = jnp.where(mask, jnp.exp(scores - m_new), 0.0)
     corr = jnp.exp(m_ref[...] - m_new)
     l_ref[...] = l_ref[...] * corr + jnp.sum(probs, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
@@ -119,92 +149,103 @@ def _accumulate(tbl_ref, seq_ref, meta_ref, q_ref, k_ref, v_ref,
         preferred_element_type=jnp.float32)
     m_ref[...] = m_new
 
-    @pl.when(p == pl.num_programs(2) - 1)
+    @pl.when(p == pl.num_programs(3) - 1)
     def _done():
-        # a lane with no live position keeps l == 0 -> output exactly 0
-        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
-        mo_ref[0, 0] = m_ref[:, 0]
-        lo_ref[0, 0] = l_ref[:, 0]
+        # a row with no live position keeps l == 0 -> output exactly 0
+        hd = acc_ref.shape[-1]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, 0] = out.reshape(q_blk, g, hd)
+        mo_ref[0, 0, :, 0] = m_ref[...].reshape(q_blk, g)
+        lo_ref[0, 0, :, 0] = l_ref[...].reshape(q_blk, g)
 
 
-def _make_kernel(page, window, attn_softcap, scale, quantized):
-    body = functools.partial(_accumulate, page=page, window=window,
-                             attn_softcap=attn_softcap, scale=scale)
+def _make_kernel(page, q_blk, g, window, attn_softcap, scale, quantized):
+    body = functools.partial(_accumulate, page=page, q_blk=q_blk, g=g,
+                             window=window, attn_softcap=attn_softcap,
+                             scale=scale)
     if quantized:
-        def kernel(tbl, seq, meta, q, k, v, ks, vs, o, mo, lo, acc, m, l):
-            body(tbl, seq, meta, q, k, v, ks, vs, o, mo, lo, acc, m, l)
+        def kernel(tbl, qs, kl, meta, q, k, v, ks, vs, o, mo, lo,
+                   acc, m, l):
+            body(tbl, qs, kl, meta, q, k, v, ks, vs, o, mo, lo, acc, m, l)
     else:
-        def kernel(tbl, seq, meta, q, k, v, o, mo, lo, acc, m, l):
-            body(tbl, seq, meta, q, k, v, None, None, o, mo, lo, acc, m, l)
+        def kernel(tbl, qs, kl, meta, q, k, v, o, mo, lo, acc, m, l):
+            body(tbl, qs, kl, meta, q, k, v, None, None, o, mo, lo,
+                 acc, m, l)
     return kernel
 
 
 # ---------------------------------------------------------------------------
 # shard-local call
 # ---------------------------------------------------------------------------
-def _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta, *,
-                     window, attn_softcap, interpret):
+def _ragged_call(q6, kp, vp, ksp, vsp, tbl, qs, kl, meta, *,
+                 window, attn_softcap, interpret):
     """One shard's kernel call.
 
-    q4 [B, KV, G, hd]; kp/vp [n_pages, page, KV, hd]; ksp/vsp
-    [n_pages, page, KV] or None; tbl [B, P]; seq [B];
+    q6 [B, QB, q_blk, KV, G, hd]; kp/vp [n_pages, page, KV, hd]; ksp/vsp
+    [n_pages, page, KV] or None; tbl [B, P]; qs/kl [B];
     meta = [page_offset, n_local_pages]. Returns (o, m, l) — normalized
-    output plus the online-softmax state for cross-shard merging.
-    """
-    bsz, n_kv, g, hd = q4.shape
+    output plus the online-softmax state for cross-shard merging, shapes
+    o [B, QB, q_blk, KV, G, hd] and m/l [B, QB, q_blk, KV, G]."""
+    bsz, qb_n, q_blk, n_kv, g, hd = q6.shape
     page = kp.shape[1]
     n_tbl = tbl.shape[1]
     quantized = ksp is not None
     scale = float(hd) ** -0.5
 
-    def _page_sel(b, h, p, tbl_ref, seq_ref, meta_ref):
+    def _page_sel(b, h, qb, p, tbl_ref, qs_ref, kl_ref, meta_ref):
         local = tbl_ref[b, p] - meta_ref[0]
+        limit = jnp.minimum(kl_ref[b], qs_ref[b] + (qb + 1) * q_blk)
         ok = ((local >= 0) & (local < meta_ref[1])
-              & (p * page < seq_ref[b]))
+              & ((p * page) < limit)
+              & (qs_ref[b] + qb * q_blk < kl_ref[b]))
         return jnp.where(ok, local, 0)
 
-    def q_map(b, h, p, *refs):
-        return (b, h, 0, 0)
+    def q_map(b, h, qb, p, *refs):
+        return (b, qb, 0, h, 0, 0)
 
-    def kv_map(b, h, p, *refs):
-        return (_page_sel(b, h, p, *refs), 0, h, 0)
+    def kv_map(b, h, qb, p, *refs):
+        return (_page_sel(b, h, qb, p, *refs), 0, h, 0)
 
-    def sc_map(b, h, p, *refs):
-        return (_page_sel(b, h, p, *refs), 0, h)
+    def sc_map(b, h, qb, p, *refs):
+        return (_page_sel(b, h, qb, p, *refs), 0, h)
 
-    def o_map(b, h, p, *refs):
-        return (b, h, 0, 0)
+    def o_map(b, h, qb, p, *refs):
+        return (b, qb, 0, h, 0, 0)
 
-    def ml_map(b, h, p, *refs):
-        return (b, h, 0)
+    def ml_map(b, h, qb, p, *refs):
+        return (b, qb, 0, h, 0)
 
-    in_specs = [pl.BlockSpec((1, 1, g, hd), q_map),
+    in_specs = [pl.BlockSpec((1, 1, q_blk, 1, g, hd), q_map),
                 pl.BlockSpec((1, page, 1, hd), kv_map),
                 pl.BlockSpec((1, page, 1, hd), kv_map)]
-    operands = [q4, kp, vp]
+    operands = [q6, kp, vp]
     if quantized:
         in_specs += [pl.BlockSpec((1, page, 1), sc_map),
                      pl.BlockSpec((1, page, 1), sc_map)]
         operands += [ksp, vsp]
 
     call = pl.pallas_call(
-        _make_kernel(page, window, attn_softcap, scale, quantized),
+        _make_kernel(page, q_blk, g, window, attn_softcap, scale,
+                     quantized),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=(bsz, n_kv, n_tbl),
+            num_scalar_prefetch=4,
+            grid=(bsz, n_kv, qb_n, n_tbl),
             in_specs=in_specs,
-            out_specs=[pl.BlockSpec((1, 1, g, hd), o_map),
-                       pl.BlockSpec((1, 1, g), ml_map),
-                       pl.BlockSpec((1, 1, g), ml_map)],
-            scratch_shapes=[pltpu.VMEM((g, hd), jnp.float32),
-                            pltpu.VMEM((g, 1), jnp.float32),
-                            pltpu.VMEM((g, 1), jnp.float32)]),
-        out_shape=[jax.ShapeDtypeStruct((bsz, n_kv, g, hd), jnp.float32),
-                   jax.ShapeDtypeStruct((bsz, n_kv, g), jnp.float32),
-                   jax.ShapeDtypeStruct((bsz, n_kv, g), jnp.float32)],
+            out_specs=[pl.BlockSpec((1, 1, q_blk, 1, g, hd), o_map),
+                       pl.BlockSpec((1, 1, q_blk, 1, g), ml_map),
+                       pl.BlockSpec((1, 1, q_blk, 1, g), ml_map)],
+            scratch_shapes=[pltpu.VMEM((q_blk * g, hd), jnp.float32),
+                            pltpu.VMEM((q_blk * g, 1), jnp.float32),
+                            pltpu.VMEM((q_blk * g, 1), jnp.float32)]),
+        out_shape=[jax.ShapeDtypeStruct((bsz, qb_n, q_blk, n_kv, g, hd),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, qb_n, q_blk, n_kv, g),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, qb_n, q_blk, n_kv, g),
+                                        jnp.float32)],
         interpret=interpret,
     )
-    return call(tbl, seq, meta, *operands)
+    return call(tbl, qs, kl, meta, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -224,20 +265,24 @@ def shard_compatible(mesh, n_pages_total: int, n_kv: int) -> bool:
     return n_pages_total % max(d, 1) == 0 and n_kv % max(m, 1) == 0
 
 
-def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
-                           *, n_kv: int, head_dim: int,
+def ragged_paged_attention(q: jax.Array, cache: dict, q_start: jax.Array,
+                           kv_len: jax.Array, *, n_kv: int, head_dim: int,
                            window: Optional[int] = None,
                            attn_softcap: Optional[float] = None,
                            mesh=None,
-                           interpret: Optional[bool] = None) -> jax.Array:
-    """Decode attention straight off the paged arena.
+                           interpret: Optional[bool] = None,
+                           q_block: int = Q_BLOCK) -> jax.Array:
+    """Ragged multi-query attention straight off the paged arena.
 
-    q ``[B, 1, H, hd]``; ``cache`` holds ``k_pages/v_pages
+    q ``[B, S, H, hd]`` — lane ``b``'s queries sit at absolute positions
+    ``q_start[b] + t``; ``cache`` holds ``k_pages/v_pages
     [n_pages, page, KV*hd]`` (int8 layouts add ``{k,v}_scale_pages
     [n_pages, page, KV]``) and ``block_tbl [B, max_pages]``;
-    ``seq_len [B]`` is each lane's valid KV length (decode position + 1;
-    0 marks an inactive lane, whose output is exactly 0). Returns
-    ``[B, 1, H, hd]`` in q's dtype.
+    ``kv_len [B]`` is each lane's valid KV bound (for a chunk that just
+    scattered ``n_new`` tokens, ``q_start + n_new``; for decode,
+    position + 1). Query rows at positions ``>= kv_len`` emit exactly 0
+    (a 0-token lane emits all zeros). Returns ``[B, S, H, hd]`` in q's
+    dtype.
 
     With a mesh the kernel runs shard-local under ``shard_map`` over the
     full ``(data, model)`` mesh: each data shard streams only its slice
@@ -246,8 +291,6 @@ def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
     Callers must check :func:`shard_compatible` first.
     """
     b, s, h, hd = q.shape
-    if s != 1:
-        raise ValueError(f"decode kernel takes one query token, got S={s}")
     if hd != head_dim or h % n_kv:
         raise ValueError((q.shape, n_kv, head_dim))
     g = h // n_kv
@@ -263,18 +306,30 @@ def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
     if "k_scale_pages" in cache:
         ksp = cache["k_scale_pages"]
         vsp = cache["v_scale_pages"]
-    q4 = q.reshape(b, n_kv, g, hd)
+
+    q_blk = min(q_block, s)
+    qb_n = -(-s // q_blk)
+    s_pad = qb_n * q_blk
+    q5 = q.reshape(b, s, n_kv, g, hd)
+    if s_pad != s:
+        q5 = jnp.pad(q5, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+    q6 = q5.reshape(b, qb_n, q_blk, n_kv, g, hd)
     tbl = cache["block_tbl"].astype(jnp.int32)
-    seq = seq_len.astype(jnp.int32)
+    qs = q_start.astype(jnp.int32)
+    kl = kv_len.astype(jnp.int32)
     kw = dict(window=window, attn_softcap=attn_softcap, interpret=interpret)
+
+    def _finish(o):
+        o = o.reshape(b, s_pad, h, hd)[:, :s]
+        return o.astype(q.dtype)
 
     d_n = _mesh_axis(mesh, "data") if mesh is not None else 1
     m_n = _mesh_axis(mesh, "model") if mesh is not None else 1
     if mesh is None or d_n * m_n == 1:
         meta = jnp.array([0, n_pages], jnp.int32)
-        o, _, _ = _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta,
-                                   **kw)
-        return o.astype(q.dtype).reshape(b, 1, h, hd)
+        o, _, _ = _ragged_call(q6, kp, vp, ksp, vsp, tbl, qs, kl, meta,
+                               **kw)
+        return _finish(o)
 
     if not shard_compatible(mesh, n_pages, n_kv):
         raise ValueError("arena/head geometry does not divide the mesh; "
@@ -283,34 +338,59 @@ def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
     from jax.sharding import PartitionSpec as P
     n_local = n_pages // d_n
 
-    def body(q4, kp, vp, ksp, vsp, tbl, seq):
+    def body(q6, kp, vp, ksp, vsp, tbl, qs, kl):
         off = jax.lax.axis_index("data").astype(jnp.int32) * n_local
         meta = jnp.stack([off, jnp.int32(n_local)])
-        o, m, l = _paged_attn_call(q4, kp, vp, ksp, vsp, tbl, seq, meta,
-                                   **kw)
+        o, m, l = _ragged_call(q6, kp, vp, ksp, vsp, tbl, qs, kl, meta,
+                               **kw)
         # flash-decoding merge of per-shard softmax states over `data`
         mg = jax.lax.pmax(m, "data")
-        w = jnp.exp(m - mg) * l                          # [B, KVl, G]
+        w = jnp.exp(m - mg) * l                  # [B, QB, q_blk, KVl, G]
         den = jax.lax.psum(w, "data")
         num = jax.lax.psum(o * w[..., None], "data")
         return num / jnp.maximum(den, 1e-30)[..., None]
 
+    q_spec = P(None, None, None, "model", None, None)
     if ksp is None:
-        def body2(q4, kp, vp, tbl, seq):
-            return body(q4, kp, vp, None, None, tbl, seq)
-        specs = (P(None, "model", None, None),
+        def body2(q6, kp, vp, tbl, qs, kl):
+            return body(q6, kp, vp, None, None, tbl, qs, kl)
+        specs = (q_spec,
                  P("data", None, "model", None),
-                 P("data", None, "model", None), P(None, None), P(None))
+                 P("data", None, "model", None),
+                 P(None, None), P(None), P(None))
         o = shard_map(body2, mesh=mesh, in_specs=specs,
-                      out_specs=P(None, "model", None, None),
-                      check_rep=False)(q4, kp, vp, tbl, seq)
+                      out_specs=q_spec,
+                      check_rep=False)(q6, kp, vp, tbl, qs, kl)
     else:
-        specs = (P(None, "model", None, None),
+        specs = (q_spec,
                  P("data", None, "model", None),
                  P("data", None, "model", None),
                  P("data", None, "model"), P("data", None, "model"),
-                 P(None, None), P(None))
+                 P(None, None), P(None), P(None))
         o = shard_map(body, mesh=mesh, in_specs=specs,
-                      out_specs=P(None, "model", None, None),
-                      check_rep=False)(q4, kp, vp, ksp, vsp, tbl, seq)
-    return o.astype(q.dtype).reshape(b, 1, h, hd)
+                      out_specs=q_spec,
+                      check_rep=False)(q6, kp, vp, ksp, vsp, tbl, qs, kl)
+    return _finish(o)
+
+
+def paged_decode_attention(q: jax.Array, cache: dict, seq_len: jax.Array,
+                           *, n_kv: int, head_dim: int,
+                           window: Optional[int] = None,
+                           attn_softcap: Optional[float] = None,
+                           mesh=None,
+                           interpret: Optional[bool] = None) -> jax.Array:
+    """Single-token decode view of :func:`ragged_paged_attention`.
+
+    q ``[B, 1, H, hd]``; ``seq_len [B]`` is each lane's valid KV length
+    (decode position + 1; 0 marks an inactive lane, whose output is
+    exactly 0). Kept as the S == 1 wrapper so decode call sites and the
+    differential harness read naturally — there is only ONE kernel."""
+    if q.shape[1] != 1:
+        raise ValueError(
+            f"decode wrapper takes one query token, got S={q.shape[1]}; "
+            f"call ragged_paged_attention for multi-query chunks")
+    seq = seq_len.astype(jnp.int32)
+    return ragged_paged_attention(q, cache, jnp.maximum(seq - 1, 0), seq,
+                                  n_kv=n_kv, head_dim=head_dim,
+                                  window=window, attn_softcap=attn_softcap,
+                                  mesh=mesh, interpret=interpret)

@@ -45,9 +45,17 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV pages copy-on-write")
     ap.add_argument("--paged-attention", action="store_true",
-                    help="decode through the Pallas page-table kernel "
-                         "(streams live pages only; interpret-mode off "
-                         "TPU)")
+                    help="attend through the ragged Pallas page-table "
+                         "kernel (streams live pages only, for decode "
+                         "tokens and prefill chunks alike; "
+                         "interpret-mode off TPU)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="split prompts into fixed-size chunks that "
+                         "co-schedule with decode lanes in the same jit "
+                         "step (default: one chunk covers the whole "
+                         "prompt)")
+    ap.add_argument("--chunk-tokens", type=int, default=32,
+                    help="prefill chunk width with --chunked-prefill")
     ap.add_argument("--sys-prompt-len", type=int, default=0,
                     help="prepend a shared system prompt of this length "
                          "to every request (multi-tenant demo)")
@@ -99,20 +107,31 @@ def main():
     if mesh is not None:
         p_struct = jax.tree_util.tree_map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    chunk = (args.chunk_tokens if args.chunked_prefill
+             else serve_steps.default_chunk(mpps, args.page_size))
     step_set = serve_steps.build_paged_steps(
         cfg, mesh, p_struct, page=args.page_size,
         n_pages=n_pages, max_slots=args.slots,
-        max_pages_per_seq=mpps, paged_attention=args.paged_attention)
+        max_pages_per_seq=mpps, chunk=chunk,
+        paged_attention=args.paged_attention)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=max_len,
                       page_size=args.page_size, mesh=mesh,
-                      step_set=step_set,
+                      step_set=step_set, chunk_tokens=chunk,
                       prefix_cache=args.prefix_cache,
                       paged_attention=args.paged_attention)
     eng.run(reqs)
     s = eng.stats
-    print(f"[serve] {s.prefills} prefills, {s.decode_steps} decode steps, "
+    print(f"[serve] {s.prefills} prefills ({s.prefill_chunks} chunks of "
+          f"<= {chunk} tokens), {s.decode_steps} decode steps, "
           f"{s.tokens_out} tokens in {s.wall_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s)")
+    if args.chunked_prefill and s.ttft_s:
+        import numpy as _np
+        print(f"[serve] chunked prefill: TTFT p50="
+              f"{_np.percentile(s.ttft_s, 50) * 1e3:.1f}ms p95="
+              f"{_np.percentile(s.ttft_s, 95) * 1e3:.1f}ms, "
+              f"{s.prefill_kv_pages_live} live pages streamed / "
+              f"{s.prefill_kv_pages_written} written by chunks")
     if args.paged_attention and s.kv_pages_full:
         print(f"[serve] paged-attention kernel: {s.kv_pages_live} live "
               f"pages streamed vs {s.kv_pages_full} full-width "

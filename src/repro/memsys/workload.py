@@ -150,6 +150,110 @@ def kv_traffic_paged(cfg: ModelConfig, seq_lens, *, page: int = 16,
                           resident_bits_exact=bits_exact)
 
 
+def chunk_pages_streamed(q_start: int, n_new: int, *, page: int = 16,
+                         q_block: int = 16) -> int:
+    """Live pages the ragged paged-attention kernel streams for one chunk.
+
+    Host-side mirror of the kernel's BlockSpec index map
+    (``kernels/paged_attention.py``): a chunk of ``n_new`` query tokens at
+    absolute positions ``q_start + t`` runs as ``ceil(n_new/q_block)`` q
+    blocks, and block ``qb`` fetches exactly the pages causally visible
+    to it — ``p * page < min(q_start + n_new, q_start + (qb+1)*q_block)``.
+    Decode (``n_new == 1``) collapses to ``ceil((q_start+1)/page)``. The
+    canonical page-granularity rule for chunk traffic, shared by the
+    engine's ``prefill_kv_pages_live`` counter and
+    :func:`kv_traffic_chunked` so the two accounts cannot drift."""
+    q_start, n_new = int(q_start), int(n_new)
+    if n_new <= 0:
+        return 0
+    kv_len = q_start + n_new
+    total = 0
+    for qb in range(-(-n_new // q_block)):
+        limit = min(kv_len, q_start + (qb + 1) * q_block)
+        total += -(-limit // page)
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedPrefillTraffic:
+    """KV traffic of one prompt's chunked prefill through the ragged path.
+
+    Chunked prefill scatters each chunk's K/V into the arena (page-rounded
+    **writes**) and then attends causally over everything written so far
+    (**reads**, streamed per q block by the kernel — the online-softmax
+    restream is quadratic in prompt length either way, so chunking leaves
+    total read traffic within one chunk-boundary rounding of monolithic;
+    what it buys is TTFT/ITL, which the serving benchmark measures). All
+    counts are whole pages so the Eq. (3)/(4) DSE charges exactly what the
+    engine's ``prefill_kv_pages_live`` / ``prefill_kv_pages_written``
+    counters record — pinned page-for-page by ``tests/test_memsys.py``."""
+    page: int
+    chunk: int
+    q_block: int
+    n_chunks: int
+    kv_pages_read: int               # live pages streamed across chunks
+    kv_pages_written: int            # pages touched by chunk K/V writes
+    kv_pages_read_monolithic: int    # one-shot (single chunk) equivalent
+    kv_read_bits: float
+    kv_write_bits: float
+
+    def apply(self, traffic: "Traffic",
+              amortize_tokens: int) -> "Traffic":
+        """Rebind a Traffic's KV stream for the Eq. (3)/(4) DSE: the
+        prefill's page reads+writes are spread over ``amortize_tokens``
+        generated tokens and added to the per-step KV bits."""
+        kv = traffic.kv_bits + ((self.kv_read_bits + self.kv_write_bits)
+                                / amortize_tokens)
+        return dataclasses.replace(
+            traffic, name=f"{traffic.name}+chunked_c{self.chunk}",
+            kv_bits=kv)
+
+
+def kv_traffic_chunked(cfg: ModelConfig, prompt_len: int, *, chunk: int,
+                       page: int = 16, q_block: int = 16,
+                       cached_len: int = 0,
+                       kv_dtype_bits: int = 16) -> ChunkedPrefillTraffic:
+    """KV traffic for prefilling one prompt in fixed-size chunks.
+
+    ``cached_len`` prompt tokens (whole pages) are served from adopted
+    prefix-cache pages: they are neither re-written nor re-chunked, but
+    later chunks still stream them as causal context. Chunk boundaries
+    follow the engine's scheduler: ``cached_len``, ``cached_len+chunk``,
+    ... (the last chunk is the remainder)."""
+    prompt_len, cached_len = int(prompt_len), int(cached_len)
+    if cached_len % page or cached_len > prompt_len:
+        raise ValueError(
+            f"cached length {cached_len} must be whole pages <= prompt "
+            f"{prompt_len}")
+    start = min(cached_len, prompt_len - 1) if prompt_len else 0
+
+    def kv_token_bits(n_tokens: int) -> float:
+        return (kv_bits_per_step(cfg, n_tokens, kv_dtype_bits)
+                - kv_bits_per_step(cfg, 0, kv_dtype_bits))
+
+    def sweep(width: int):
+        reads = writes = n_chunks = 0
+        s0 = start
+        while s0 < prompt_len:
+            n = min(width, prompt_len - s0)
+            reads += chunk_pages_streamed(s0, n, page=page,
+                                          q_block=q_block)
+            writes += -(-(s0 + n) // page) - s0 // page
+            n_chunks += 1
+            s0 += n
+        return reads, writes, n_chunks
+
+    reads, writes, n_chunks = sweep(chunk)
+    mono_reads, _, _ = sweep(max(prompt_len - start, 1))
+    per_page = kv_token_bits(page)
+    return ChunkedPrefillTraffic(
+        page=page, chunk=chunk, q_block=q_block, n_chunks=n_chunks,
+        kv_pages_read=reads, kv_pages_written=writes,
+        kv_pages_read_monolithic=mono_reads,
+        kv_read_bits=reads * per_page,
+        kv_write_bits=writes * per_page)
+
+
 @dataclasses.dataclass(frozen=True)
 class PrefixKVTraffic:
     """Batched KV stream when prompt prefixes are served from cached pages.

@@ -173,11 +173,12 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
     required for suffix prefill at a nonzero start position, where padding
     columns would otherwise scatter into the slot's live pages.
 
-    ``paged_attention=True`` routes single-token paged decode through the
-    Pallas page-table-aware kernel (``kernels/paged_attention.py``), which
-    streams only live pages instead of materializing the full block-table
-    width; multi-token paged writes (suffix prefill) and geometries the
-    kernel cannot shard keep the XLA reference gather."""
+    ``paged_attention=True`` routes EVERY paged step — single-token
+    decode, chunked prefill, and mixed rounds — through the ragged Pallas
+    page-table kernel (``kernels/paged_attention.py``), which streams only
+    causally-live pages instead of materializing the full block-table
+    width. The XLA gather below survives only as the differential oracle
+    and the fallback for geometries the kernel cannot shard."""
     b, s, d_model = x.shape
     hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
     if tap:
@@ -205,20 +206,20 @@ def attn_block(p: dict, x: jax.Array, cfg, *,
                 tap("wo", out.reshape(b, s, nh * hd))
             return linear(out.reshape(b, s, nh * hd), p["wo"],
                           p.get("bo"), use_pallas, tp_dim=0), None
-    elif "k_pages" in cache:                 # paged decode / suffix prefill
+    elif "k_pages" in cache:                 # paged decode / prefill chunk
         new_cache = paged_cache_write(cache, k, v, positions,
                                       valid_len=valid_len)
         valid = (valid_len if valid_len is not None
                  else positions[:, -1] + 1)
-        if paged_attention and s == 1:
-            from repro.kernels.paged_attention import (paged_decode_attention,
-                                                       shard_compatible)
+        if paged_attention:
+            from repro.kernels.paged_attention import (
+                ragged_paged_attention, shard_compatible)
             mesh = rctx.current_mesh()
             if shard_compatible(mesh, cache["k_pages"].shape[0], nkv):
-                out = paged_decode_attention(
-                    q, new_cache, valid, n_kv=nkv, head_dim=hd,
-                    window=window, attn_softcap=cfg.attn_softcap,
-                    mesh=mesh)
+                out = ragged_paged_attention(
+                    q, new_cache, positions[:, 0], valid, n_kv=nkv,
+                    head_dim=hd, window=window,
+                    attn_softcap=cfg.attn_softcap, mesh=mesh)
                 if tap:
                     tap("wo", out.reshape(b, s, nh * hd))
                 return linear(out.reshape(b, s, nh * hd), p["wo"],

@@ -125,6 +125,11 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     new_cache = {}
     window = cfg.window if kind.endswith("_local") else None
+    # attention takes valid_len as an ABSOLUTE position bound (chunked
+    # prefill runs at positions start..start+S-1); the SSM recurrence
+    # wants the count of valid columns in THIS input window
+    ssm_valid = (valid_len - positions[:, 0]
+                 if valid_len is not None else None)
 
     if kind.startswith("attn"):
         mix, ac = attn_block(p["attn"], h, cfg, positions=positions,
@@ -139,7 +144,7 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
     elif kind == "mamba":
         mix, mc = mamba_block(p["mamba"], h, cfg,
                               cache=cache.get("mamba") if cache else None,
-                              valid_len=valid_len,
+                              valid_len=ssm_valid,
                               tap=_sub(tap, "mamba"), use_pallas=use_pallas)
         if mc is not None:
             new_cache["mamba"] = mc
@@ -153,7 +158,7 @@ def apply_block(p: dict, x: jax.Array, kind: str, use_moe: bool, cfg, *,
                                paged_attention=paged_attention)
         mix_m, mc = mamba_block(p["mamba"], h, cfg,
                                 cache=cache.get("mamba") if cache else None,
-                                valid_len=valid_len,
+                                valid_len=ssm_valid,
                                 tap=_sub(tap, "mamba"),
                                 use_pallas=use_pallas)
         mix = 0.5 * (mix_a + mix_m)

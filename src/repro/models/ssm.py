@@ -115,11 +115,15 @@ def mamba_block(p: dict, x: jax.Array, cfg, *,
                 ) -> Tuple[jax.Array, Optional[dict]]:
     """Mamba2 mixer. cache = {'ssm': [B,H,P,N], 'conv': [B,K-1,convdim]}.
 
-    ``valid_len [B]``: true prompt lengths when prefilling a right-padded
-    bucket (paged serving). Unlike attention, the recurrence is not
-    causally immune to right padding, so pad positions get dt=0 / x=0 —
-    the same state-neutral values the internal chunk padding uses — and
-    the conv cache is gathered at the true sequence end."""
+    ``valid_len [B]``: count of valid columns in THIS input window (the
+    serving step passes chunks at arbitrary absolute positions;
+    ``blocks.apply_block`` converts its absolute bound to this count).
+    Unlike attention, the recurrence is not causally immune to right
+    padding, so pad positions get dt=0 / x=0 — the same state-neutral
+    values the internal chunk padding uses — the conv cache is gathered
+    at the true window end, and a fully-padded lane (``valid_len == 0``,
+    a lane idling in a mixed serving round) leaves both states
+    untouched, including through the s == 1 decode recurrence."""
     bsz, s, _ = x.shape
     di, hd = cfg.d_inner, cfg.ssm_headdim
     nh, g, n = cfg.ssm_nheads, cfg.ssm_ngroups, cfg.d_state
@@ -131,7 +135,7 @@ def mamba_block(p: dict, x: jax.Array, cfg, *,
 
     conv_cache = cache.get("conv") if cache else None
     xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_cache,
-                                 valid_len=valid_len if s > 1 else None)
+                                 valid_len=valid_len)
     xbc = jax.nn.silu(xbc)
     xs, b_mat, c_mat = jnp.split(xbc, [di, di + g * n], axis=-1)
 
@@ -155,6 +159,11 @@ def mamba_block(p: dict, x: jax.Array, cfg, *,
         y = jnp.einsum("bhpn,bhn->bhp", h_new, ch.astype(jnp.float32))
         y = y[:, None].astype(x.dtype)                        # [B,1,H,P]
         h_final = h_new
+        if valid_len is not None:
+            # a lane idling in a mixed serving round (0 valid tokens)
+            # must not advance its state on the padding token
+            vm = (valid_len > 0)[:, None, None, None]
+            h_final = jnp.where(vm, h_new, h0)
     else:
         if valid_len is not None:
             vm = (jnp.arange(s)[None, :] < valid_len[:, None])    # [B,S]

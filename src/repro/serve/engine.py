@@ -1,21 +1,24 @@
 """Serving engines: paged continuous batching (default) + legacy per-slot.
 
-``ServeEngine`` is the paged engine: all active slots decode in ONE
-``jax.jit`` step against a shared paged KV arena (``serve/paged_kv.py``),
-with FIFO admission, power-of-2 prefill bucketing and recompute-style
-preemption (``serve/scheduler.py``). Weights may be dense fp or the QMC
-serving format (ShardedQTensor / QTensor stacks) — matmul dispatch handles
-either, so the paper's eMEM-resident weights and the LPDDR5-resident paged
-KV stream meet in the same step function.
+``ServeEngine`` is the paged engine: every round, all active slots run in
+ONE ``jax.jit`` step against a shared paged KV arena (``serve/paged_kv.py``)
+— decode lanes carry one token each, prefilling lanes carry a chunk of
+their prompt, and both co-schedule in the same ragged step
+(``serve/steps.py``), with FIFO admission, a per-round chunk budget and
+recompute-style preemption (``serve/scheduler.py``). Weights may be dense
+fp or the QMC serving format (ShardedQTensor / QTensor stacks) — matmul
+dispatch handles either, so the paper's eMEM-resident weights and the
+LPDDR5-resident paged KV stream meet in the same step function.
 
 ``LegacyServeEngine`` keeps the original loop — N sequential batch-1 decode
 calls over per-slot contiguous caches — as the parity/throughput baseline
 for ``benchmarks/serving.py``.
 
-Under greedy decoding both engines are token-identical: the paged gather
-reads the same K/V values the contiguous slab holds (int8 caches share one
-quantizer, ``models.kvcache.quantize_kv``), and masked pages contribute
-exp(-1e30) = 0 to the softmax.
+Under greedy decoding both engines are token-identical: chunked prefill
+scatters the same K/V values a one-shot contiguous prefill computes (int8
+caches share one quantizer, ``models.kvcache.quantize_kv``), causal
+attention makes each query's output independent of how the prompt was
+chunked, and masked pages contribute exp(-1e30) = 0 to the softmax.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.memsys.workload import chunk_pages_streamed
 from repro.models.config import ModelConfig
 from repro.models.model import prefill
 from repro.serve import steps as serve_steps
@@ -48,34 +52,43 @@ class Request:
 
 @dataclasses.dataclass
 class EngineStats:
-    prefills: int = 0
-    decode_steps: int = 0            # jit decode calls (batched = 1/step)
+    prefills: int = 0                # prompts fully prefilled
+    prefill_chunks: int = 0          # chunk executions (>= prefills)
+    decode_steps: int = 0            # rounds that advanced a decode lane
     tokens_out: int = 0
     wall_s: float = 0.0
     preemptions: int = 0
     pages_peak: int = 0
     tokens_discarded: int = 0        # emitted then erased by preemption
-    # per-step K/V gather work (page counts, summed over decode steps):
-    # `live` is what a page-table-aware kernel streams (ceil(seq/page) per
-    # active lane — the bytes kv_traffic_paged(live_only=True) charges);
-    # `full` is the block-table width the XLA reference gather reads
+    # per-step K/V gather work (page counts): `live` is what the ragged
+    # page-table kernel streams (the bytes the DSE charges); `full` is the
+    # block-table width the XLA reference gather reads. Decode lanes land
+    # in kv_pages_*; prefill chunks in prefill_kv_pages_* (their stream is
+    # per q block — memsys.workload.chunk_pages_streamed — and their
+    # writes are page-rounded, the kv_traffic_chunked account)
     kv_pages_live: int = 0
     kv_pages_full: int = 0
+    prefill_kv_pages_live: int = 0
+    prefill_kv_pages_written: int = 0
     # prefix cache (all zero when caching is off)
     prompt_tokens: int = 0           # prompt tokens across admissions
     prefill_tokens: int = 0          # tokens actually prefilled (suffixes)
-    prefill_tokens_padded: int = 0   # same, after pow2 bucketing
+    prefill_tokens_padded: int = 0   # same, after chunk-width padding
     cache_hits: int = 0              # admissions served partly from cache
     cache_hit_tokens: int = 0        # prompt tokens adopted (cache+dedup)
     dedup_hits: int = 0              # admissions aliasing an in-flight
     #                                  identical prompt's live slot pages
     cow_copies: int = 0              # shared pages privatized on write
     cache_evictions: int = 0         # cached pages evicted under pressure
-    # per decode call: wall seconds and tokens emitted by that call (the
+    # per jit round: wall seconds and tokens emitted by that round (the
     # emitted count includes tokens a later preemption discards — the jit
-    # work was really done; tokens_discarded records how many)
+    # work was really done; tokens_discarded records how many). First
+    # tokens land in the round their prompt's last chunk runs.
     step_seconds: List[float] = dataclasses.field(default_factory=list)
     step_tokens: List[int] = dataclasses.field(default_factory=list)
+    # per request (first emission only — a preempted request's recompute
+    # does not reset its clock): seconds from run() start to first token
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def tokens_per_s(self) -> float:
@@ -121,24 +134,35 @@ class ServeEngine:
     pool — the default fits every slot at full length, so preemption only
     occurs when the caller shrinks it (memory-pressure experiments).
 
+    ``chunk_tokens`` is the prefill chunk width: prompts are consumed in
+    fixed-size chunks that scatter straight into the arena and co-schedule
+    with decode lanes in the same jit step (attention-only stacks; hybrid
+    stacks interleave chunk rounds and decode rounds because the SSM
+    recurrence cannot mix a 1-token update into a multi-token scan
+    bitwise). The default — one chunk covers the longest admissible
+    prompt — is "monolithic" prefill through the very same ragged path;
+    either way the engine compiles exactly two step shapes (C = 1 and
+    C = chunk), never a pow2 bucket zoo.
+
     ``prefix_cache=True`` keeps finished prompts' full KV pages in a radix
     index (``serve/prefix_cache.py``): admissions whose prompt shares a
     cached page-aligned prefix adopt those pages copy-on-write and prefill
-    only the uncached suffix. The pool and arena then persist across
-    ``run()`` calls so a shared system prompt is paid for once per server,
-    not once per batch. Requires an attention-only stack — KV pages cannot
-    snapshot SSM/conv recurrent state.
+    only the uncached suffix (in chunks, straight against the arena). The
+    pool and arena then persist across ``run()`` calls so a shared system
+    prompt is paid for once per server, not once per batch. Requires an
+    attention-only stack — KV pages cannot snapshot SSM/conv state.
 
     On attention-only stacks the scheduler also runs **in-flight dedup**
     (a pending-prefill table): identical prompts admitted while an earlier
     copy still occupies a slot alias that slot's full prompt pages instead
     of prefilling them again — no radix index required.
 
-    ``paged_attention=True`` decodes through the Pallas page-table kernel
-    (``kernels/paged_attention.py``): each lane streams only its live
-    pages instead of the full block-table width — token-identical to the
-    reference gather under greedy decoding; ``EngineStats.kv_pages_live``
-    vs ``kv_pages_full`` records the gather-work gap either way.
+    ``paged_attention=True`` runs every step's attention through the
+    ragged Pallas page-table kernel (``kernels/paged_attention.py``):
+    each lane streams only its causally-live pages instead of the full
+    block-table width — token-identical to the reference gather under
+    greedy decoding; ``EngineStats`` records the gather-work gap either
+    way.
 
     ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
     sharded: the arena's page axis over ``data``, attention heads / TP
@@ -152,6 +176,7 @@ class ServeEngine:
                  max_len: int = 256, cache_dtype=jnp.float32,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  max_prefill_tokens: Optional[int] = None,
+                 chunk_tokens: Optional[int] = None,
                  prefix_cache: bool = False, mesh=None,
                  step_set: Optional[serve_steps.PagedServeSteps] = None,
                  inflight_dedup: Optional[bool] = None,
@@ -183,21 +208,30 @@ class ServeEngine:
         self.max_prefill_tokens = (max_prefill_tokens
                                    or max(512, bucket_len(max_len,
                                                           page_size)))
+        self.chunk = chunk_tokens or serve_steps.default_chunk(
+            self.max_pages_per_seq, page_size)
         self.stats = EngineStats()
         self.paged_attention = paged_attention
         self._dedup = attn_only if inflight_dedup is None \
             else inflight_dedup
+        # co-scheduling a 1-token decode into a C-wide step is bitwise
+        # for attention (per-query independence) but not for the SSM
+        # scan (s==1 takes the O(1) recurrence, s>1 the chunked SSD
+        # path) — hybrid stacks run chunk rounds and decode rounds
+        # separately instead
+        self._co_schedule = attn_only
         if step_set is not None:
             if step_set.cfg != cfg or step_set.mesh != mesh or \
                     not step_set.compatible_with(
                         page=self.page, n_pages=self.n_pages,
                         max_slots=slots,
                         max_pages_per_seq=self.max_pages_per_seq,
-                        cache_dtype=cache_dtype,
+                        cache_dtype=cache_dtype, chunk=self.chunk,
                         paged_attention=paged_attention):
                 raise ValueError(
                     "step_set was built for a different engine geometry "
-                    "(cfg/mesh/page/n_pages/slots/cache_dtype must match)")
+                    "(cfg/mesh/page/n_pages/slots/cache_dtype/chunk must "
+                    "match)")
         self._steps = step_set
         # pool + arena (+ prefix index) persist across run() calls so
         # cached pages survive between batches, server-style
@@ -216,7 +250,7 @@ class ServeEngine:
             self.cfg, self.mesh, p_struct, page=self.page,
             n_pages=self.n_pages, max_slots=self.slots,
             max_pages_per_seq=self.max_pages_per_seq,
-            cache_dtype=self.cache_dtype,
+            cache_dtype=self.cache_dtype, chunk=self.chunk,
             paged_attention=self.paged_attention)
 
     def _ensure_pool(self) -> PagedKVPool:
@@ -254,12 +288,12 @@ class ServeEngine:
         """Process all requests to completion; returns them with outputs.
 
         ``on_token(slot, token, request)`` — when given — streams every
-        emitted token: once after the prefill that produces a request's
-        first token (slot is -1 if the request finished at prefill without
-        occupying a decode slot) and once per active slot after each jitted
-        decode step. A preempted request re-streams from its first token
-        when recomputed; consumers that must not see duplicates should
-        key on ``request.uid`` and truncate.
+        emitted token: once in the round a request's last prefill chunk
+        produces its first token (slot is -1 if the request finished at
+        prefill without ever decoding) and once per active decode lane
+        after each jitted round. A preempted request re-streams from its
+        first token when recomputed; consumers that must not see
+        duplicates should key on ``request.uid`` and truncate.
 
         Stats describe this run only (a fresh EngineStats per call); the
         prefix cache and its pages persist across calls."""
@@ -283,16 +317,24 @@ class ServeEngine:
         cache = self.prefix_cache
         sched = FifoScheduler(SchedulerConfig(
             page=self.page, max_prefill_tokens=self.max_prefill_tokens,
-            max_len=self.max_len), prefix_cache=cache,
+            max_len=self.max_len, chunk=self.chunk), prefix_cache=cache,
             pool=pool if self._dedup else None)
         for r in requests:
             sched.enqueue(r)
 
         active: List[Optional[Request]] = [None] * self.slots
-        pos = np.zeros(self.slots, np.int64)
+        pos = np.zeros(self.slots, np.int64)   # next write position
         next_tok = np.zeros(self.slots, np.int64)
+        seen_first: set = set()
+
+        def prefilling(s: int) -> bool:
+            return (active[s] is not None
+                    and pos[s] < len(active[s].prompt))
 
         def emit(s: int, tok: int, req: Request) -> None:
+            if req.uid not in seen_first:
+                seen_first.add(req.uid)
+                self.stats.ttft_s.append(time.monotonic() - t0)
             if on_token is not None:
                 on_token(s, tok, req)
 
@@ -311,8 +353,9 @@ class ServeEngine:
 
         def preempt(victim: int) -> None:
             req = active[victim]
-            # recompute-style eviction: drop generated state, requeue; the
-            # emitted tokens are regenerated, so back them out of the stats
+            # recompute-style eviction: drop generated state, requeue; a
+            # lane preempted mid-prompt has emitted nothing and releases
+            # exactly the pages its chunks wrote (plus adopted refs)
             self.stats.tokens_out -= len(req.out_tokens)
             self.stats.tokens_discarded += len(req.out_tokens)
             req.out_tokens = []
@@ -321,52 +364,20 @@ class ServeEngine:
             sched.on_preempt(victim)
             sched.requeue_front(req)
 
-        def pad_bucket(tokens):
-            """Right-pad to the pow2 prefill bucket; returns (toks,
-            last_logit_row) and charges the prefill stats."""
-            bucket = bucket_len(len(tokens), self.page)
-            toks = np.zeros((1, bucket), np.int32)
-            toks[0, :len(tokens)] = tokens
-            self.stats.prefills += 1
-            self.stats.prefill_tokens += len(tokens)
-            self.stats.prefill_tokens_padded += bucket
-            return toks, len(tokens) - 1
-
-        def record(req, tok: int) -> bool:
-            """Record the prefill token; True when it finished the request
-            (EOS / budget / full cache) so no decode slot is needed."""
-            req.out_tokens.append(tok)
-            self.stats.tokens_out += 1
-            return _finished(req, len(req.prompt), self.max_len)
-
-        def seat(req, s: int, tok: int) -> None:
-            """Shared admission epilogue: the request occupies slot s."""
-            active[s] = req
-            pos[s] = len(req.prompt)
-            next_tok[s] = tok
-            sched.on_admit(s)
-            emit(s, tok, req)
-
-        def retire(req, s: int, tok: int) -> None:
-            """Finished at prefill: release the slot's pages (if any) and
-            stream the lone token with slot -1 (never entered decode)."""
-            req.done = True
-            pool.free_slot(s)
-            emit(-1, tok, req)
-
-        def admit_hit(adm, s: int) -> bool:
-            """Hit admission (radix match or in-flight dedup): adopt the
-            shared pages, COW if the recomputed final token lands in one,
-            prefill the suffix against the paged arena. Returns False if
-            pages ran out."""
+        def seat(adm, s: int) -> bool:
+            """Seat an admission: adopt cached pages, allocate the first
+            chunk's pages, COW the shared page a mid-page restart writes
+            into, zero recurrent state. No model step runs here — chunks
+            are scheduled round by round. False when pages ran out."""
             req = adm.req
             L = len(req.prompt)
             start = adm.suffix_start
-            pool.adopt(s, adm.cached_pages)
-            if self._alloc(s, L) is None:
+            if adm.cached_pages:
+                pool.adopt(s, adm.cached_pages)
+            if self._alloc(s, min(L, start + self.chunk)) is None:
                 pool.free_slot(s)
                 return False
-            cow = pool.cow(s, start)
+            cow = pool.cow(s, start) if adm.cached_pages else None
             while cow is False:
                 if cache is None or not cache.evict(1):
                     pool.free_slot(s)
@@ -375,61 +386,26 @@ class ServeEngine:
                 cow = pool.cow(s, start)
             if cow is not None:
                 self._arena = self._steps.page_copy(self._arena, *cow)
-            toks, last = pad_bucket(req.prompt[start:])
-            slot_cache = pool.install_tables(self._arena, slot=s)
-            logits, self._arena = self._steps.suffix_prefill(
-                self.params, slot_cache, jnp.asarray(toks),
-                jnp.asarray([start], jnp.int32),
-                jnp.asarray([L], jnp.int32))
-            if adm.dedup:
-                self.stats.dedup_hits += 1
+            if self._steps.reset_state is not None:
+                self._arena = self._steps.reset_state(self._arena, s)
+            active[s] = req
+            pos[s] = start
+            sched.on_admit(s)
+            sched.note_progress(s, start)
+            if adm.cached_pages:
+                if adm.dedup:
+                    self.stats.dedup_hits += 1
+                else:
+                    self.stats.cache_hits += 1
+                self.stats.cache_hit_tokens += start
             else:
-                self.stats.cache_hits += 1
-            self.stats.cache_hit_tokens += start
-            publish(req, s)
-            tok = int(jnp.argmax(logits[0, last]))
-            if record(req, tok):
-                retire(req, s, tok)
-            else:
-                seat(req, s, tok)
-            return True
-
-        def admit_miss(adm, s: int) -> bool:
-            """Contiguous bucketed prefill + page adoption (original
-            path); publishes the finished pages to the index and the
-            scheduler's pending-prefill table."""
-            req = adm.req
-            L = len(req.prompt)
-            toks, last = pad_bucket(req.prompt)
-            logits, contig = self._steps.prefill(
-                self.params, jnp.asarray(toks),
-                jnp.asarray([L], jnp.int32))
-            tok = int(jnp.argmax(logits[0, last]))
-            if record(req, tok):
-                retire(req, s, tok)  # e.g. prefill emitted EOS: no pages
-                return True          # were allocated, contig KV dropped
-            if self._alloc(s, L) is None:
-                # undo record() AND pad_bucket(): the attempt is requeued
-                # and will re-charge in full on retry — leaving these in
-                # would double-count prefill_tokens against the
-                # once-per-success prompt_tokens in the derived ratios
-                req.out_tokens = []
-                self.stats.tokens_out -= 1
-                self.stats.prefills -= 1
-                self.stats.prefill_tokens -= L
-                self.stats.prefill_tokens_padded -= toks.shape[1]
-                return False
-            ids = list(pool.slot_pages[s])
-            ids += [0] * (toks.shape[1] // self.page - len(ids))
-            self._arena = self._steps.adopt(self._arena, contig,
-                                            jnp.asarray(ids, jnp.int32), s)
-            publish(req, s)
-            seat(req, s, tok)
-            sched.note_prefill(req, s)
+                sched.note_prefill(req, s)
+                if cache is not None:
+                    sched.miss_open(s)
+            self.stats.prompt_tokens += L
             return True
 
         def admit() -> None:
-            sched.start_round()
             free_slots = [s for s in range(self.slots)
                           if active[s] is None]
             while free_slots:
@@ -439,88 +415,157 @@ class ServeEngine:
                 if adm is None:
                     break
                 s = free_slots[0]
-                ok = (admit_hit(adm, s) if adm.cached_pages
-                      else admit_miss(adm, s))
+                ok = seat(adm, s)
                 if not ok and adm.cached_pages:
                     # the hit pinned its matched pages, which may be the
                     # very pages the capacity check promised as evictable;
                     # degrade to an uncached admission that can evict them
-                    # — but only if the FULL prefill (the hit was budgeted
-                    # for its suffix only) still fits the round budget
-                    ok = (sched.upgrade_budget(adm)
-                          and admit_miss(adm, s))
+                    adm.cached_pages, adm.cached_len = [], 0
+                    adm.dedup = False
+                    ok = seat(adm, s)
                 if not ok:          # promised pages vanished; retry later
                     sched.requeue_front(adm.req)
                     break
-                # charged only on success: a requeued admission would
-                # otherwise double-count its prompt in hit_rate /
-                # prefill_token_reduction when retried
-                self.stats.prompt_tokens += len(adm.req.prompt)
-                if active[s] is adm.req:
-                    free_slots.pop(0)
+                free_slots.pop(0)
 
-        admit()
         while any(a is not None for a in active) or sched.pending:
+            sched.start_round()
+            admit()
             if not any(a is not None for a in active):
                 if sched.pending:
                     raise PoolExhausted(
                         f"queue head needs more than the whole pool "
                         f"({self.n_pages} pages)")
                 break
-            # every active slot must own the page its next token writes to;
-            # on exhaustion first evict unpinned cached pages, then the
-            # youngest younger slot — or self, if none is younger
-            # (oldest-first order makes progress certain)
+            # --- plan the round: chunk grants for prefilling lanes, one
+            # token per decode lane; every planned lane must own the
+            # pages it writes — on exhaustion first evict unpinned cached
+            # pages, then the youngest younger slot — or self, if none is
+            # younger (oldest-first order makes progress certain)
+            plan = {}                       # slot -> chunk tokens
             order = sorted((s for s in range(self.slots)
                             if active[s] is not None),
                            key=lambda s: sched.admitted_at[s])
             for s in order:
-                while (active[s] is not None
-                       and self._alloc(s, int(pos[s]) + 1) is None):
+                while active[s] is not None:
+                    if prefilling(s):
+                        n = plan.get(s)
+                        if n is None:
+                            n = sched.grant_chunk(
+                                len(active[s].prompt) - int(pos[s]))
+                            if n == 0:
+                                break       # budget spent: idle a round
+                            plan[s] = n
+                        need = int(pos[s]) + n
+                    else:
+                        need = int(pos[s]) + 1
+                    if self._alloc(s, need) is not None:
+                        break
                     victim = sched.choose_victim(s)
                     if victim is not None:
+                        plan.pop(victim, None)
                         preempt(victim)
                         continue
                     if not any(active[t] is not None
                                for t in range(self.slots) if t != s):
                         raise PoolExhausted(
                             f"sequence in slot {s} needs "
-                            f"{int(pos[s]) + 1} tokens of KV but the pool "
+                            f"{need} tokens of KV but the pool "
                             f"holds {self.n_pages} pages total")
+                    plan.pop(s, None)
                     preempt(s)      # yield to older slots; retry later
 
+            decode_lanes = [s for s in order if active[s] is not None
+                            and not prefilling(s)]
+            run_decode = bool(decode_lanes) and (self._co_schedule
+                                                 or not plan)
+            if not plan and not run_decode:
+                continue            # everything preempted/idled; re-admit
+
+            max_n = max(plan.values(), default=0)
+            c_len = self.chunk if max_n > 1 else 1
+            toks = np.zeros((self.slots, c_len), np.int32)
+            start = np.zeros(self.slots, np.int32)
+            n_new = np.zeros(self.slots, np.int32)
+            for s in range(self.slots):
+                if active[s] is None:
+                    continue
+                start[s] = pos[s]
+                if s in plan:
+                    n = plan[s]
+                    n_new[s] = n
+                    p0 = int(pos[s])
+                    toks[s, :n] = active[s].prompt[p0:p0 + n]
+                elif not prefilling(s) and run_decode:
+                    n_new[s] = 1
+                    toks[s, 0] = next_tok[s]
+
             ts = time.monotonic()
-            # gather-work accounting: this step attends seq = pos+1 per
-            # active lane (the token being written included)
-            act = [s for s in range(self.slots) if active[s] is not None]
+            # gather-work accounting: decode lanes attend seq = pos+1 (the
+            # token being written included); chunk lanes stream per q
+            # block, page-for-page what kv_traffic_chunked charges
+            act_dec = decode_lanes if run_decode else []
             self.stats.kv_pages_live += sum(
-                pages_for(int(pos[s]) + 1, self.page) for s in act)
-            self.stats.kv_pages_full += len(act) * self.max_pages_per_seq
+                pages_for(int(pos[s]) + 1, self.page) for s in act_dec)
+            self.stats.kv_pages_full += len(act_dec) * self.max_pages_per_seq
+            for s in plan:
+                self.stats.prefill_kv_pages_live += chunk_pages_streamed(
+                    int(pos[s]), plan[s], page=self.page)
+                self.stats.prefill_kv_pages_written += (
+                    pages_for(int(pos[s]) + plan[s], self.page)
+                    - int(pos[s]) // self.page)
             cache_in = pool.install_tables(self._arena)
-            toks = jnp.asarray(next_tok[:, None].astype(np.int32))
-            posv = jnp.asarray(pos.astype(np.int32))
-            logits, self._arena = self._steps.decode(self.params, toks,
-                                                     cache_in, posv)
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            self.stats.decode_steps += 1
+            logits, self._arena = self._steps.step(
+                self.params, jnp.asarray(toks), cache_in,
+                jnp.asarray(start), jnp.asarray(n_new))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))    # [B, C]
+            if act_dec:
+                self.stats.decode_steps += 1
 
             emitted = 0
-            for s in range(self.slots):
+            for s in order:
                 req = active[s]
                 if req is None:
                     continue
-                pos[s] += 1
-                tok = int(nxt[s])
-                next_tok[s] = tok
-                req.out_tokens.append(tok)
-                self.stats.tokens_out += 1
-                emitted += 1
-                emit(s, tok, req)
-                if _finished(req, int(pos[s]), self.max_len):
-                    finish(s)
+                if s in plan:
+                    n = plan[s]
+                    pos[s] += n
+                    sched.note_progress(s, int(pos[s]))
+                    self.stats.prefill_chunks += 1
+                    self.stats.prefill_tokens += n
+                    self.stats.prefill_tokens_padded += c_len
+                    if int(pos[s]) < len(req.prompt):
+                        continue            # mid-prompt: more chunks due
+                    # last chunk: the logit at the prompt's final token is
+                    # the request's first generated token
+                    self.stats.prefills += 1
+                    publish(req, s)
+                    sched.miss_closed(s)
+                    tok = int(nxt[s, n - 1])
+                    req.out_tokens.append(tok)
+                    self.stats.tokens_out += 1
+                    emitted += 1
+                    if _finished(req, len(req.prompt), self.max_len):
+                        req.done = True     # e.g. EOS at prefill: never
+                        active[s] = None    # enters a decode round
+                        pool.free_slot(s)
+                        sched.on_finish(s)
+                        emit(-1, tok, req)
+                    else:
+                        next_tok[s] = tok
+                        emit(s, tok, req)
+                elif s in act_dec:
+                    pos[s] += 1
+                    tok = int(nxt[s, 0])
+                    next_tok[s] = tok
+                    req.out_tokens.append(tok)
+                    self.stats.tokens_out += 1
+                    emitted += 1
+                    emit(s, tok, req)
+                    if _finished(req, int(pos[s]), self.max_len):
+                        finish(s)
             self.stats.step_seconds.append(time.monotonic() - ts)
             self.stats.step_tokens.append(emitted)
-            admit()
 
         self.stats.preemptions = sched.preemptions
         self.stats.pages_peak = max(self.stats.pages_peak, pool.pages_peak)

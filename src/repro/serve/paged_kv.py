@@ -266,17 +266,14 @@ class PagedKVPool:
                     f"slot {s} maps pages beyond its {n} live entries: "
                     f"{self.block_tables[s].tolist()}")
 
-    def install_tables(self, arena, slot: Optional[int] = None):
+    def install_tables(self, arena):
         """Return arena with current block tables written into every group.
 
-        ``slot`` narrows the tables to that one slot's row (batch 1) — the
-        view the paged suffix prefill runs against. Tables are validated
-        by :meth:`check_tables` on every install, so a corrupted mapping
-        raises before any step can attend over garbage."""
+        Tables are validated by :meth:`check_tables` on every install, so
+        a corrupted mapping raises before any step can attend over
+        garbage."""
         self.check_tables()
         tbl = self.device_tables(self.cfg.n_groups)
-        if slot is not None:
-            tbl = tbl[:, slot:slot + 1]
         out = {}
         for key, grp in arena.items():
             grp = dict(grp)

@@ -1,22 +1,29 @@
-"""Admission scheduling for the paged continuous-batching engine.
+"""Admission + chunk scheduling for the paged continuous-batching engine.
 
 Policy (deliberately simple, the paper's edge target is one device):
 
   * **FIFO admission** — queued requests enter decode slots in arrival
     order; a request is admitted only when a slot is free AND the pool can
-    cover its prompt pages.
-  * **Token-budget prefill bucketing** — prompts are right-padded to
-    power-of-2 lengths (floored at one page) so the jit'd prefill compiles
-    for a bounded set of shapes, and each admission round prefills at most
-    ``max_prefill_tokens`` padded tokens so a burst of long prompts
-    cannot starve in-flight decodes (continuous batching's
-    prefill/decode interleave knob).
+    cover its FIRST prefill chunk (later chunks allocate lazily, round by
+    round).
+  * **Chunked prefill with a per-round token budget** — prompts are
+    consumed in fixed-size chunks of ``chunk`` tokens that run in the
+    same jit step as the active decode lanes (the engine's unified ragged
+    step), so a long prompt never stalls in-flight decodes for more than
+    one chunk. Each round grants at most ``max_prefill_tokens`` prefill
+    tokens across all prefilling lanes; the round's FIRST grant is exempt
+    (the budget throttles bursts, it must never deadlock a long prompt).
+    The fixed chunk width replaces the old power-of-2 prefill bucketing —
+    the engine compiles exactly two step shapes (decode-only and chunk)
+    instead of a bucket zoo.
   * **Preemption on pool exhaustion** — when a running sequence needs its
-    next page and the free list is empty, the *youngest* admitted slot is
-    evicted (recompute-style: its pages are freed and the request re-enters
-    the queue head to be prefilled again later). Youngest-first preserves
-    FIFO completion order and, under greedy decoding, restarting is
-    output-identical.
+    next page (or chunk of pages) and the free list is empty, the
+    *youngest* admitted slot is evicted (recompute-style: its pages are
+    freed and the request re-enters the queue head to be prefilled again
+    later). A lane preempted mid-prompt releases exactly the pages its
+    chunks have written — page refcounts stay clean. Youngest-first
+    preserves FIFO completion order and, under greedy decoding,
+    restarting is output-identical.
 """
 from __future__ import annotations
 
@@ -32,8 +39,10 @@ from repro.serve.paged_kv import pages_for
 def bucket_len(n: int, page: int) -> int:
     """Smallest power of two >= max(n, page).
 
-    ``page`` is itself a power of two, so every bucket is a whole number of
-    pages — the invariant the prefill-adopt copy relies on."""
+    ``page`` is itself a power of two, so every bucket is a whole number
+    of pages. Chunked prefill killed the per-prompt pow2 bucketing; this
+    survives as the default-chunk rule (one chunk covers the longest
+    admissible prompt unless the caller opts into smaller chunks)."""
     b = page
     while b < n:
         b <<= 1
@@ -43,8 +52,9 @@ def bucket_len(n: int, page: int) -> int:
 @dataclasses.dataclass
 class SchedulerConfig:
     page: int = 16
-    max_prefill_tokens: int = 512     # padded prefill tokens per round
+    max_prefill_tokens: int = 512     # prefill tokens granted per round
     max_len: int = 256                # per-sequence logical capacity
+    chunk: int = 64                   # prefill chunk width (tokens)
 
 
 @dataclasses.dataclass
@@ -53,7 +63,7 @@ class Admission:
 
     ``cached_pages`` alias the index's pages for the first ``cached_len``
     prompt tokens (whole pages; empty on a miss). ``suffix_start`` is where
-    prefill must actually run from — ``cached_len``, except for a
+    chunked prefill must actually run from — ``cached_len``, except for a
     whole-prompt hit where it is ``len(prompt) - 1`` so the final token's
     logit is recomputed (its KV write COWs the shared page it lands in).
     ``dedup`` marks an in-flight dedup: the pages alias a *live slot's*
@@ -63,7 +73,6 @@ class Admission:
     cached_pages: List[int] = dataclasses.field(default_factory=list)
     cached_len: int = 0
     dedup: bool = False
-    first_in_round: bool = False     # budget-exempt (anti-deadlock rule)
 
     @property
     def suffix_start(self) -> int:
@@ -71,25 +80,27 @@ class Admission:
 
 
 class FifoScheduler:
-    """FIFO queue + per-round prefill token budget + preemption policy.
+    """FIFO queue + per-round chunk budget + preemption policy.
 
     With a ``prefix_cache``, admission matches the head request's prompt
     against the radix index and hands the engine an :class:`Admission`
-    split — the prefill token budget and the pool-capacity check are then
-    charged only for the uncached suffix (still pow2-bucketed).
+    split — chunked prefill then starts at the uncached suffix, and the
+    pool-capacity check covers only the first chunk beyond the adopted
+    pages.
 
     **In-flight dedup** (``pool`` given): a *pending-prefill table* maps
     each prompt currently occupying a slot to that leader slot. When the
     queue head's prompt is identical to a pending one, admission aliases
     the leader's full-page prompt prefix into the follower's block table
-    (the same adopt→COW→suffix-prefill path a radix hit takes) instead of
-    prefilling it again — identical prompts admitted in the same round
-    share KV even when the prefix-cache index is disabled, or before the
-    leader's pages are published to it. The leader's full prompt pages
-    are append-stable while it decodes (new tokens land in later pages;
-    a page-aligned boundary write goes to a *new* page), so aliasing live
-    slot pages is safe; entries drop when the leader finishes or is
-    preempted, after which the radix index (if any) takes over."""
+    (the same adopt→COW→chunked-suffix path a radix hit takes) instead of
+    prefilling it again — identical prompts share KV even when the
+    prefix-cache index is disabled, or before the leader's pages are
+    published to it. Chunked prefill rebases the flow onto chunk
+    boundaries: while the leader is still mid-prompt its trailing pages
+    are only partially written, so the head *waits* (admission returns
+    None) until the leader's prefill completes — ``note_progress`` is the
+    engine's per-chunk progress feed. Entries drop when the leader
+    finishes or is preempted; the radix index takes over afterwards."""
 
     def __init__(self, cfg: SchedulerConfig, prefix_cache=None, pool=None):
         self.cfg = cfg
@@ -103,6 +114,8 @@ class FifoScheduler:
         self._round_first = True
         self.pending_prefill: Dict[bytes, int] = {}   # prompt key -> slot
         self._slot_keys: Dict[int, bytes] = {}
+        self.filled: Dict[int, int] = {}  # slot -> prompt tokens in KV
+        self._open_miss: set = set()  # slots mid-prefill of index misses
         self._match_memo = None   # (req id, index version, pages, len)
 
     def enqueue(self, req) -> None:
@@ -120,15 +133,39 @@ class FifoScheduler:
         self._round_budget = self.cfg.max_prefill_tokens
         self._round_first = True
 
+    # ---- per-round chunk budget ----------------------------------------
+    def grant_chunk(self, n_remaining: int) -> int:
+        """Prefill tokens one lane may run this round (0 = idle a round).
+
+        Grants are ``min(chunk, remaining)``, capped by what is left of
+        this round's ``max_prefill_tokens``. The round's FIRST grant
+        ignores the cap — the budget throttles prefill *bursts* relative
+        to decode lanes, it must never wedge a chunk wider than the
+        budget. Invariant (pinned by tests): after the first grant, the
+        sum of a round's grants never exceeds ``max_prefill_tokens``."""
+        want = min(self.cfg.chunk, int(n_remaining))
+        if want <= 0:
+            return 0
+        if self._round_first:
+            self._round_first = False
+            self._round_budget -= want
+            return want
+        n = min(want, self._round_budget)
+        if n <= 0:
+            return 0
+        self._round_budget -= n
+        return n
+
     def next_admission(self, free_pages: int) -> Optional[Admission]:
-        """Pop the queue head if this round's budget and the pool allow it.
+        """Pop the queue head if a slot's first chunk can start now.
 
         Returns an :class:`Admission` (request + prefix-cache split), or
-        None (empty queue / budget spent / pool cannot hold the prompt
-        right now). ``free_pages`` may include pages the engine can evict
-        from the prefix cache on demand. The first admission of a round
-        ignores the token budget — the budget throttles prefill *bursts*,
-        it must never deadlock a long prompt."""
+        None (empty queue / pool cannot hold the first chunk beyond the
+        adopted prefix / the head must wait for an in-flight identical
+        prompt to finish prefilling). ``free_pages`` may include pages
+        the engine can evict from the prefix cache on demand. Chunk
+        tokens are charged per round via :meth:`grant_chunk`, not here —
+        admission is seat-only."""
         if not self.queue:
             return None
         req = self.queue[0]
@@ -146,44 +183,44 @@ class FifoScheduler:
                     self.prefix_cache.match(req.prompt)
                 self._match_memo = (key, (adm.cached_pages,
                                           adm.cached_len))
-        self._match_pending(adm)
-        padded = bucket_len(len(req.prompt) - adm.suffix_start,
-                            self.cfg.page)
-        if not self._round_first and padded > self._round_budget:
+        if self._match_pending(adm):
+            return None               # wait for the in-flight leader
+        if (self.prefix_cache is not None and not adm.cached_pages
+                and self._open_miss):
+            # one index MISS in flight at a time: a miss's pages publish
+            # to the radix when its chunked prefill completes, so the
+            # head behind it — which often shares the prefix (the
+            # multi-tenant system prompt) — admits as a HIT once the
+            # leader finishes instead of re-prefilling the same pages in
+            # parallel. Hits admit freely; pre-chunking prefill was
+            # fully serial anyway, so this never loses to the old path.
             return None
-        # fresh pages to cover the prompt beyond the adopted prefix, plus
-        # one for the COW of a whole-prompt hit's recomputed final token
-        need = (pages_for(len(req.prompt), self.cfg.page)
+        L = len(req.prompt)
+        start = adm.suffix_start
+        first_end = min(L, start + self.cfg.chunk)
+        # fresh pages to cover the first chunk beyond the adopted prefix,
+        # plus one for the COW of a whole-prompt hit's recomputed token
+        need = (pages_for(first_end, self.cfg.page)
                 - len(adm.cached_pages)
-                + (1 if adm.cached_len >= len(req.prompt) else 0))
+                + (1 if adm.cached_len >= L else 0))
         if need > free_pages:
             return None
-        self._round_budget -= padded
-        adm.first_in_round = self._round_first
-        self._round_first = False
         self.queue.popleft()
         return adm
 
-    def upgrade_budget(self, adm: Admission) -> bool:
-        """Charge the degrade of a hit admission to a FULL prefill.
+    def miss_open(self, slot: int) -> None:
+        """A cache-miss admission started chunking in ``slot`` — further
+        misses wait until :meth:`miss_closed` (publish gate above). A
+        set, not a scalar: a hit that degrades to a miss mid-admission
+        can open a second slot while one is already chunking, and the
+        gate must hold until the LAST open miss publishes."""
+        self._open_miss.add(slot)
 
-        ``next_admission`` budgeted the hit for its suffix bucket only;
-        when the engine cannot honor the hit (its promised pages
-        vanished) and falls back to an uncached prefill, the difference
-        to the full-prompt bucket must still fit this round's budget —
-        otherwise a failed 16-token-suffix hit could silently burst a
-        1024-token prefill past ``max_prefill_tokens``, the exact decode
-        stall the budget bounds. Returns False when it does not fit (the
-        caller requeues; the round's first admission stays exempt, so a
-        long prompt can never deadlock)."""
-        full = bucket_len(len(adm.req.prompt), self.cfg.page)
-        suffix = bucket_len(len(adm.req.prompt) - adm.suffix_start,
-                            self.cfg.page)
-        extra = full - suffix
-        if not adm.first_in_round and extra > self._round_budget:
-            return False
-        self._round_budget -= extra
-        return True
+    def miss_closed(self, slot: int) -> None:
+        """The slot's prefill completed (pages published), finished, or
+        was preempted — miss admissions may flow again once no miss is
+        left in flight."""
+        self._open_miss.discard(slot)
 
     # ---- in-flight dedup (pending-prefill table) -----------------------
     @staticmethod
@@ -202,26 +239,43 @@ class FifoScheduler:
             self.pending_prefill[key] = slot
             self._slot_keys[slot] = key
 
+    def note_progress(self, slot: int, n_tokens: int) -> None:
+        """Engine feed: ``slot`` now holds ``n_tokens`` prompt tokens in
+        KV (advanced after every chunk). Gates when a pending-prefill
+        leader's pages become aliasable — a page is safe to share only
+        once every token in it has been written."""
+        self.filled[slot] = int(n_tokens)
+
     def _drop_pending(self, slot: int) -> None:
         key = self._slot_keys.pop(slot, None)
         if key is not None and self.pending_prefill.get(key) == slot:
             del self.pending_prefill[key]
+        self.filled.pop(slot, None)
 
-    def _match_pending(self, adm: Admission) -> None:
+    def _match_pending(self, adm: Admission) -> bool:
         """Upgrade ``adm`` to alias an in-flight identical prompt's pages
         when that beats the radix match (a slot holds the WHOLE prompt,
-        the index at best its published prefix)."""
+        the index at best its published prefix). Returns True when the
+        head should WAIT instead: the leader is still mid-prefill, so its
+        trailing pages are not fully written yet — one round later they
+        will be, and aliasing beats recomputing the whole prompt."""
         if self.pool is None:
-            return
+            return False
         leader = self.pending_prefill.get(self.prompt_key(adm.req.prompt))
         if leader is None:
-            return
-        n_full = len(adm.req.prompt) // self.cfg.page
+            return False
+        L = len(adm.req.prompt)
+        n_full = L // self.cfg.page
+        if adm.cached_len >= n_full * self.cfg.page:
+            return False              # radix already covers the max share
+        if self.filled.get(leader, 0) < L:
+            return True               # leader mid-prefill: wait a round
         pages = self.pool.slot_pages[leader][:n_full]
         if len(pages) == n_full and n_full * self.cfg.page > adm.cached_len:
             adm.cached_pages = list(pages)
             adm.cached_len = n_full * self.cfg.page
             adm.dedup = True
+        return False
 
     def on_admit(self, slot: int) -> None:
         self.admitted_at[slot] = self._admit_seq
@@ -230,6 +284,7 @@ class FifoScheduler:
     def on_finish(self, slot: int) -> None:
         self.admitted_at.pop(slot, None)
         self._drop_pending(slot)
+        self.miss_closed(slot)
 
     def choose_victim(self, requester: int) -> Optional[int]:
         """Youngest slot admitted strictly AFTER the requester (or None).
@@ -257,3 +312,4 @@ class FifoScheduler:
         self.preemptions += 1
         self.admitted_at.pop(slot, None)
         self._drop_pending(slot)
+        self.miss_closed(slot)

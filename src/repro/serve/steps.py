@@ -4,16 +4,36 @@ Both consumers of the serve subsystem go through this module:
 
   * ``serve.engine.ServeEngine`` (and ``launch/serve.py``, which drives it)
     uses :func:`build_paged_steps` — the paged continuous-batching step
-    set: batched paged decode, bucketed contiguous prefill, suffix prefill
-    straight into the arena, prefill-adopt, and the COW page copy.
+    set: ONE unified ragged step (chunked prefill + batched decode in the
+    same jit), the COW page copy, and the per-slot SSM-state reset.
   * ``launch/dryrun.py`` uses :func:`build_prefill` / :func:`build_decode`
     — the contiguous production-mesh cells it lowers and costs.
 
 Every builder takes ``(cfg, mesh, params_struct)``. With ``mesh=None`` the
-builders emit plain single-device ``jax.jit`` functions (byte-identical to
-the pre-sharding engine closures, and lru-cached per config so engines
-sharing a ModelConfig reuse XLA executables). With a mesh they emit jit
+builders emit plain single-device ``jax.jit`` functions (lru-shared per
+FULL step geometry — cfg, page, pool/slot sizes, cache dtype, chunk and
+the ``paged_attention`` flag are all part of the cache key, so a late
+flag flip can never reuse a stale jit). With a mesh they emit jit
 functions with **explicit input/output shardings**.
+
+The unified step contract
+-------------------------
+  ``step(params, tokens [B, C], arena, start [B], n_new [B]) ->
+  (logits [B, C, V], arena)``
+
+  Lane ``b`` runs ``n_new[b]`` new tokens at absolute positions
+  ``start[b] + t``: a decode lane carries one token (``n_new = 1``), a
+  prefill lane carries a chunk of its prompt (``1 <= n_new <= C``), and
+  an idle lane carries ``n_new = 0`` (its writes route to the null page
+  and its output rows are dead). K/V scatter straight into the paged
+  arena and the ragged attention read happen inside the one traced
+  function — there is no contiguous prefill cache and no adopt copy any
+  more. The engine drives exactly two shapes per geometry: ``C = 1``
+  (decode-only rounds) and ``C = chunk`` (rounds with a prefill chunk in
+  flight), which is the whole compile surface — the pow2 bucket zoo is
+  gone. ``reset_state(arena, slot)`` zeroes a slot's dense SSM/conv rows
+  at admission (``None`` for attention-only stacks); ``page_copy`` is
+  the device half of ``PagedKVPool.cow``.
 
 Sharding contract (what shards, what replicates)
 ------------------------------------------------
@@ -29,13 +49,14 @@ Sharding contract (what shards, what replicates)
   * **Block tables** — replicated: any shard must resolve any logical
     position to a (possibly remote) page; GSPMD routes the cross-shard
     gather/scatter that results.
-  * **Decode batch** — tokens/positions/logits shard batch over the dp
-    axes when the slot count divides; batch-1 prefill paths replicate.
+  * **Step batch** — tokens/positions/logits shard batch over the dp
+    axes when the slot count divides (prefill chunks ride the same
+    batched step, so they shard with it).
   * **SSM/conv state** — dense per-slot, batch on dp when divisible.
 
-Arena buffers are donated on non-CPU backends (decode/suffix-prefill/
-adopt/page-copy all rewrite the arena in place); the CPU backend cannot
-donate and would warn on every call, so donation is disabled there.
+Arena buffers are donated on non-CPU backends (the step, state reset and
+page copy all rewrite the arena in place); the CPU backend cannot donate
+and would warn on every call, so donation is disabled there.
 """
 from __future__ import annotations
 
@@ -58,7 +79,7 @@ from repro.models.model import prefill as _prefill
 
 
 # ==========================================================================
-# contiguous builders (dry-run cells)
+# contiguous builders (dry-run cells + legacy engine)
 # ==========================================================================
 def cache_struct(cfg: ModelConfig, batch: int, max_len: int,
                  dtype=jnp.bfloat16):
@@ -136,15 +157,11 @@ def _logits2d(mesh, batch: int, cfg) -> NamedSharding:
 
 
 @functools.lru_cache(maxsize=None)
-def contiguous_decode(cfg: ModelConfig,
-                      paged_attention: bool = False) -> Callable:
-    """Single-device contiguous decode step (the legacy per-slot engine
+def contiguous_decode(cfg: ModelConfig) -> Callable:
+    """Single-device contiguous decode step (the legacy per-slot engine's
 
-    and the mesh-less paged engine share this executable): one jit per
-    (ModelConfig, paged_attention) — the flag only changes how paged
-    caches are read, contiguous caches trace identically."""
-    return jax.jit(lambda p, t, c, pos: _decode(
-        cfg, p, t, c, pos, paged_attention=paged_attention))
+    executable): one jit per ModelConfig."""
+    return jax.jit(lambda p, t, c, pos: _decode(cfg, p, t, c, pos))
 
 
 # ==========================================================================
@@ -156,13 +173,10 @@ class PagedServeSteps:
 
     geometry they were built for (the engine validates compatibility).
 
-      decode(params, token [B,1], arena, pos [B]) -> (logits [B,V], arena)
-      prefill(params, tokens [1,T], valid_len [1]) -> (logits [1,T,V],
-          contiguous cache)                    (compiles once per bucket T)
-      suffix_prefill(params, arena_slice, tokens [1,T], start [1],
-          valid [1]) -> (logits [1,T,V], arena_slice)
-      adopt(arena, contig_cache, page_ids, slot) -> arena
+      step(params, tokens [B,C], arena, start [B], n_new [B]) ->
+          (logits [B,C,V], arena)      (compiles once per C in {1, chunk})
       page_copy(arena, src, dst) -> arena
+      reset_state(arena, slot) -> arena    (None for attention-only cfgs)
     """
     cfg: ModelConfig
     mesh: Optional[object]
@@ -171,21 +185,31 @@ class PagedServeSteps:
     max_slots: int
     max_pages_per_seq: int
     cache_dtype: object
-    decode: Callable
-    prefill: Callable
-    suffix_prefill: Callable
-    adopt: Callable
+    chunk: int                       # prefill chunk width (the C > 1 shape)
+    step: Callable
     page_copy: Callable
-    paged_attention: bool = False    # decode via the Pallas paged kernel
+    reset_state: Optional[Callable] = None
+    paged_attention: bool = False    # attention via the ragged Pallas kernel
 
     def compatible_with(self, *, page, n_pages, max_slots,
-                        max_pages_per_seq, cache_dtype,
+                        max_pages_per_seq, cache_dtype, chunk,
                         paged_attention=False) -> bool:
         return (self.page == page and self.n_pages == n_pages
                 and self.max_slots == max_slots
                 and self.max_pages_per_seq == max_pages_per_seq
                 and self.cache_dtype == cache_dtype
+                and self.chunk == chunk
                 and self.paged_attention == paged_attention)
+
+
+def default_chunk(max_pages_per_seq: int, page: int) -> int:
+    """Default prefill chunk width: the pow2 that covers the longest
+    admissible sequence, so every prompt is a single chunk ("monolithic"
+    prefill through the same ragged path). THE one copy of this rule —
+    the builder, ``ServeEngine`` and ``launch/serve.py`` must agree or
+    ``compatible_with`` rejects the step set."""
+    from repro.serve.scheduler import bucket_len
+    return bucket_len(max_pages_per_seq * page, page)
 
 
 def default_n_pages(slots: int, max_pages_per_seq: int, mesh=None) -> int:
@@ -219,74 +243,48 @@ def _donate(argnums: Tuple[int, ...]) -> dict:
     return {"donate_argnums": argnums}
 
 
-def _logits3d(mesh, cfg) -> NamedSharding:
-    """[1, T, V] prefill logits: batch-1 replicated, vocab on model."""
-    tp_n = meshlib.axis_size(mesh, "model")
-    v_ax = "model" if ("model" in mesh.axis_names
-                       and cfg.vocab % tp_n == 0) else None
-    return NamedSharding(mesh, P(None, None, v_ax))
-
-
-def _contig_prefill_cache_shardings(cfg: ModelConfig, mesh,
-                                    cache_dtype):
-    """Sharding tree for the batch-1 bucketed-prefill cache.
-
-    Bucket length T varies per compile, so only shape-independent dims
-    shard: the fused kv_dim (and int8 scale head dim) on ``model``;
-    batch-1 and the sequence dim replicate. Structure is T-independent, so
-    one tree (built at a nominal T) serves every bucket."""
-    struct = cache_struct(cfg, 1, 16, cache_dtype)
-    tp_n = meshlib.axis_size(mesh, "model")
-
-    def leaf_sharding(path, leaf):
-        name = shd._path_str(path)
-        last = leaf.shape[-1]
-        ax = ("model" if ("model" in mesh.axis_names and tp_n > 1
-                          and last % tp_n == 0
-                          and (name.endswith("/k") or name.endswith("/v")
-                               or name.endswith("_scale"))) else None)
-        spec = [None] * leaf.ndim
-        spec[-1] = ax
-        return NamedSharding(mesh, P(*spec))
-
-    flat, treedef = jax.tree_util.tree_flatten_with_path(struct)
-    return jax.tree_util.tree_unflatten(
-        treedef, [leaf_sharding(p, l) for p, l in flat])
-
-
 def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
                       page: int, n_pages: int, max_slots: int,
                       max_pages_per_seq: int,
                       cache_dtype=jnp.float32,
+                      chunk: Optional[int] = None,
                       paged_attention: bool = False) -> PagedServeSteps:
     """Build the full paged serving step set for one engine geometry.
 
-    ``mesh=None`` → plain single-device jit (lru-shared per config where
-    the function is geometry-independent). With a mesh, every step runs
-    under the runtime mesh context (so ShardedQTensor weights dispatch to
-    ``qmm_shard_map`` and the paged gather/scatter picks up its sharding
-    constraints) and carries explicit input/output shardings per the
-    module-level contract; ``params_struct`` (a pytree of
+    ``chunk`` is the prefill chunk width (the ``C > 1`` step shape); the
+    default — the pow2 that covers a full-length sequence — makes every
+    prompt a single chunk ("monolithic" prefill through the same ragged
+    path), matching ``ServeEngine``'s default.
+
+    ``mesh=None`` → plain single-device jit, lru-shared per FULL geometry
+    (every keyword above is part of the cache key). With a mesh, every
+    step runs under the runtime mesh context (so ShardedQTensor weights
+    dispatch to ``qmm_shard_map`` and the paged gather/scatter picks up
+    its sharding constraints) and carries explicit input/output shardings
+    per the module-level contract; ``params_struct`` (a pytree of
     ShapeDtypeStructs matching the serving weights) is then required.
 
-    ``paged_attention=True`` builds the decode step over the Pallas
-    page-table kernel (``kernels/paged_attention.py``): only live pages
-    stream per lane. Under a mesh the kernel runs shard-local (pages over
+    ``paged_attention=True`` runs the step's attention through the ragged
+    Pallas page-table kernel (``kernels/paged_attention.py``): only
+    causally-live pages stream per lane, for decode tokens and prefill
+    chunks alike. Under a mesh the kernel runs shard-local (pages over
     ``data``, KV heads over ``model``, flash-decoding softmax merge) —
     the arena geometry must divide the mesh (``shard_compatible``), which
     ``default_n_pages`` guarantees for the page axis; unsupported
     geometries fall back to the XLA gather inside the traced step.
     """
+    if chunk is None:
+        chunk = default_chunk(max_pages_per_seq, page)
     if mesh is None:
+        step, page_copy, reset = _single_device_steps(
+            cfg, page, n_pages, max_slots, max_pages_per_seq,
+            cache_dtype, chunk, paged_attention)
         return PagedServeSteps(
             cfg=cfg, mesh=None, page=page, n_pages=n_pages,
             max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
-            cache_dtype=cache_dtype, paged_attention=paged_attention,
-            decode=contiguous_decode(cfg, paged_attention),
-            prefill=_bucketed_prefill_jit(cfg, cache_dtype),
-            suffix_prefill=_suffix_prefill_jit(cfg),
-            adopt=_adopt_jit(cfg, page),
-            page_copy=_page_copy_jit(cfg))
+            cache_dtype=cache_dtype, chunk=chunk,
+            paged_attention=paged_attention,
+            step=step, page_copy=page_copy, reset_state=reset)
 
     if params_struct is None:
         raise ValueError("sharded step builders need params_struct to "
@@ -302,99 +300,69 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     b_sh = NamedSharding(mesh, shd.batch_spec(mesh, max_slots))
     tok_sh = NamedSharding(mesh, P(*(tuple(shd.batch_spec(mesh, max_slots))
                                      + (None,))))
-    l2_sh = _logits2d(mesh, max_slots, cfg)
-    l3_sh = _logits3d(mesh, cfg)
-    c_sh = _contig_prefill_cache_shardings(cfg, mesh, cache_dtype)
+    l_sh = _logits_bcv(mesh, max_slots, cfg)
+    step_body = _step_body(cfg, paged_attention)
 
-    # shared single-device bodies, traced under the mesh context so
-    # matmul dispatch and the paged-cache sharding constraints see it
-    prefill_body = _bucketed_prefill_body(cfg, cache_dtype)
-    suffix_body = _suffix_prefill_body(cfg)
-
-    def decode_fn(params, token, arena, pos):
+    def step_fn(params, tokens, arena, start, n_new):
         with ctx.use_mesh(mesh, dp):
-            return _decode(cfg, params, token, arena, pos,
-                           paged_attention=paged_attention)
+            return step_body(params, tokens, arena, start, n_new)
 
-    def prefill_fn(params, tokens, valid_len):
-        with ctx.use_mesh(mesh, dp):
-            return prefill_body(params, tokens, valid_len)
-
-    def suffix_fn(params, arena, tokens, start, valid):
-        with ctx.use_mesh(mesh, dp):
-            return suffix_body(params, arena, tokens, start, valid)
-
+    reset = None
+    if any(k == "mamba" or k.startswith("hybrid") for k in cfg.pattern):
+        reset = jax.jit(_reset_state_body(cfg),
+                        in_shardings=(a_sh, rep), out_shardings=a_sh,
+                        **_donate((0,)))
     return PagedServeSteps(
         cfg=cfg, mesh=mesh, page=page, n_pages=n_pages,
         max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
-        cache_dtype=cache_dtype, paged_attention=paged_attention,
-        decode=jax.jit(decode_fn,
-                       in_shardings=(p_sh, tok_sh, a_sh, b_sh),
-                       out_shardings=(l2_sh, a_sh),
-                       **_donate((2,))),
-        prefill=jax.jit(prefill_fn,
-                        in_shardings=(p_sh, rep, rep),
-                        out_shardings=(l3_sh, c_sh)),
-        suffix_prefill=jax.jit(suffix_fn,
-                               in_shardings=(p_sh, a_sh, rep, rep, rep),
-                               out_shardings=(l3_sh, a_sh),
-                               **_donate((1,))),
-        # adopt's contiguous-cache input varies per bucket T, so its
-        # shardings are inherited from the prefill output; the arena
-        # output is pinned to the arena contract
-        adopt=jax.jit(_adopt_body(cfg, page), out_shardings=a_sh,
-                      **_donate((0,))),
+        cache_dtype=cache_dtype, chunk=chunk,
+        paged_attention=paged_attention,
+        step=jax.jit(step_fn,
+                     in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh),
+                     out_shardings=(l_sh, a_sh),
+                     **_donate((2,))),
         page_copy=jax.jit(_page_copy_body(cfg),
                           in_shardings=(a_sh, rep, rep),
-                          out_shardings=a_sh, **_donate((0,))))
+                          out_shardings=a_sh, **_donate((0,))),
+        reset_state=reset)
+
+
+def _logits_bcv(mesh, batch: int, cfg) -> NamedSharding:
+    """[B, C, V] step logits: batch on dp when divisible, vocab on model
+    when divisible; the chunk axis replicates."""
+    bs = shd.batch_spec(mesh, batch)
+    b_ax = bs[0] if len(bs) > 0 else None
+    tp_n = meshlib.axis_size(mesh, "model")
+    v_ax = "model" if ("model" in mesh.axis_names
+                       and cfg.vocab % tp_n == 0) else None
+    return NamedSharding(mesh, P(b_ax, None, v_ax))
 
 
 # --------------------------------------------------------------------------
 # step bodies (shared by the mesh-less lru-cached jits and the sharded
 # builders above)
 # --------------------------------------------------------------------------
-_CONTIG_TO_PAGED = (("k", "k_pages"), ("v", "v_pages"),
-                    ("k_scale", "k_scale_pages"),
-                    ("v_scale", "v_scale_pages"))
+def _step_body(cfg: ModelConfig, paged_attention: bool):
+    """The ONE serving step: ragged chunked prefill + batched decode.
 
+    ``tokens [B, C]`` are lane-local new tokens; lane ``b`` runs its
+    first ``n_new[b]`` columns at absolute positions ``start[b] + t``.
+    ``valid_len = start + n_new`` masks reads past each lane's bound,
+    routes right-padding K/V writes to the null page, and (converted to
+    a relative count inside ``blocks.apply_block``) keeps recurrent SSM
+    state clean for idle and padded lanes."""
 
-def _adopt_body(cfg: ModelConfig, page: int):
-    """(arena, contig_cache, page_ids, slot) -> arena.
+    def step(params, tokens, arena, start, n_new):
+        c = tokens.shape[1]
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        valid = start + n_new
+        logits, new_arena, _ = _forward(cfg, params, tokens,
+                                        positions=positions, cache=arena,
+                                        valid_len=valid,
+                                        paged_attention=paged_attention)
+        return logits, new_arena
 
-    Copies a batch-1 contiguous prefill cache (bucket length T, a multiple
-    of ``page``) into the arena pages listed in ``page_ids`` (length
-    T//page; trailing ids may repeat the null page 0 when the prompt needs
-    fewer pages than the bucket holds — null-page contents are never
-    read). SSM/conv state is dense per-slot and lands in row ``slot``.
-    One compile per prefill bucket length."""
-
-    def adopt(arena, contig, page_ids, slot):
-        out = {}
-        for i, kind in enumerate(cfg.pattern):
-            key = f"b{i}"
-            grp = dict(arena[key])
-            if "attn" in grp:
-                attn = dict(grp["attn"])
-                src = contig[key]["attn"]
-                n = page_ids.shape[0]
-                for c_name, p_name in _CONTIG_TO_PAGED:
-                    if c_name not in src:
-                        continue
-                    s = src[c_name]                    # [G, 1, T, X]
-                    g, _, t, x = s.shape
-                    s = s.reshape(g, n, page, x)
-                    attn[p_name] = attn[p_name].at[:, page_ids].set(s)
-                grp["attn"] = attn
-            if "mamba" in grp:
-                mm = dict(grp["mamba"])
-                src = contig[key]["mamba"]
-                mm["ssm"] = mm["ssm"].at[:, slot].set(src["ssm"][:, 0])
-                mm["conv"] = mm["conv"].at[:, slot].set(src["conv"][:, 0])
-                grp["mamba"] = mm
-            out[key] = grp
-        return out
-
-    return adopt
+    return step
 
 
 def _page_copy_body(cfg: ModelConfig):
@@ -420,63 +388,42 @@ def _page_copy_body(cfg: ModelConfig):
     return _copy
 
 
-@functools.lru_cache(maxsize=None)
-def _adopt_jit(cfg: ModelConfig, page: int):
-    return jax.jit(_adopt_body(cfg, page))
+def _reset_state_body(cfg: ModelConfig):
+    """(arena, slot) -> arena with the slot's dense SSM/conv rows zeroed.
+
+    A freshly admitted slot's recurrent state must start from zero — the
+    chunked prefill accumulates it in place (there is no per-admission
+    contiguous cache to adopt from any more), and the row may hold a
+    previous occupant's garbage."""
+
+    def _reset(arena, slot):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                mm["ssm"] = mm["ssm"].at[:, slot].set(0.0)
+                mm["conv"] = mm["conv"].at[:, slot].set(0.0)
+                grp["mamba"] = mm
+            out[key] = grp
+        return out
+
+    return _reset
 
 
 @functools.lru_cache(maxsize=None)
-def _page_copy_jit(cfg: ModelConfig):
-    return jax.jit(_page_copy_body(cfg))
+def _single_device_steps(cfg: ModelConfig, page: int, n_pages: int,
+                         max_slots: int, max_pages_per_seq: int,
+                         cache_dtype, chunk: int, paged_attention: bool):
+    """Single-device jits, cached on the FULL step geometry.
 
-
-def _bucketed_prefill_body(cfg: ModelConfig, cache_dtype=jnp.float32):
-    """prefill(params, tokens [1,T], valid_len [1]) ->
-
-    (full_logits [1,T,V], cache). Unlike ``models.model.prefill`` this
-    keeps the full logits so the caller can read the logit at the true
-    (pre-padding) last prompt token — right padding is causally invisible
-    to attention, and ``valid_len`` keeps the recurrent SSM state clean.
-    Compiles once per bucket T."""
-
-    def _bucketed(params, tokens, valid_len):
-        cache = KV.init_cache(cfg, 1, tokens.shape[1], cache_dtype)
-        logits, new_cache, _ = _forward(cfg, params, tokens, cache=cache,
-                                        valid_len=valid_len)
-        return logits, new_cache
-
-    return _bucketed
-
-
-def _suffix_prefill_body(cfg: ModelConfig):
-    """suffix_prefill(params, arena_slice, tokens [1,T], start [1],
-    valid [1]) -> (full_logits [1,T,V], arena_slice).
-
-    Prefills an uncached prompt *suffix* directly against the paged arena:
-    queries run at absolute positions ``start + t`` and attend the slot's
-    whole block table, so cached prefix pages adopted by the prefix cache
-    are visible without any contiguous round-trip. ``valid`` is the
-    absolute position bound start + true_suffix_len: reads past it are
-    masked and writes of right-padding bucket garbage are routed to the
-    null page. ``arena_slice`` is the arena with ``block_tbl`` narrowed to
-    the one admitting slot (batch 1). Compiles once per suffix bucket T."""
-
-    def _suffix(params, arena, tokens, start, valid):
-        t = tokens.shape[1]
-        positions = start[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
-        logits, new_arena, _ = _forward(cfg, params, tokens,
-                                        positions=positions, cache=arena,
-                                        valid_len=valid)
-        return logits, new_arena
-
-    return _suffix
-
-
-@functools.lru_cache(maxsize=None)
-def _bucketed_prefill_jit(cfg: ModelConfig, cache_dtype=jnp.float32):
-    return jax.jit(_bucketed_prefill_body(cfg, cache_dtype))
-
-
-@functools.lru_cache(maxsize=None)
-def _suffix_prefill_jit(cfg: ModelConfig):
-    return jax.jit(_suffix_prefill_body(cfg))
+    The key is exactly the tuple ``PagedServeSteps.compatible_with``
+    checks — a flag (or geometry knob) passed late can never silently
+    reuse a jit traced for a different configuration."""
+    step = jax.jit(_step_body(cfg, paged_attention))
+    page_copy = jax.jit(_page_copy_body(cfg))
+    reset = None
+    if any(k == "mamba" or k.startswith("hybrid") for k in cfg.pattern):
+        reset = jax.jit(_reset_state_body(cfg))
+    return step, page_copy, reset

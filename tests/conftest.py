@@ -136,3 +136,66 @@ def paged_reference(q, cache, seq, *, n_kv, hd, window=None,
                   q_positions=jnp.maximum(seq - 1, 0)[:, None],
                   kv_positions=kv_pos, kv_valid_len=seq, causal=True,
                   window=window, attn_softcap=attn_softcap)
+
+
+def make_ragged_case(rng, *, page=8, n_kv=2, gqa=2, hd=16, quantized=False,
+                     lanes=((0, 0), (0, 1), (3, 5), (8, 8)), n_tbl=None,
+                     poison=1e3):
+    """Build one multi-query (ragged) paged case.
+
+    ``lanes`` is a per-lane ``(q_start, n_new)`` list: the lane's chunk of
+    ``n_new`` query tokens sits at absolute positions ``q_start + t`` and
+    its valid KV length is ``q_start + n_new`` (the chunk's own K/V are
+    already scattered, exactly the state ``attn_block`` hands the kernel).
+    Live lanes get shuffled page ids so the gather is genuinely indirect;
+    the null page is poisoned so any dead-page leak breaks parity loudly.
+    Returns (q [B, S, H, hd], cache, q_start [B], n_new [B]) with
+    S = max(n_new, 1)."""
+    import jax.numpy as jnp
+    q_start = np.asarray([l[0] for l in lanes], np.int32)
+    n_new = np.asarray([l[1] for l in lanes], np.int32)
+    kv_len = q_start + n_new
+    bsz, kvd = len(lanes), n_kv * hd
+    s = max(1, int(n_new.max()))
+    live = [-(-int(L) // page) if L else 0 for L in kv_len]
+    n_tbl = n_tbl or max(max(live), 1) + 1          # slack dead tail slots
+    n_pages = 1 + sum(live) + 2                     # null + live + spare
+    kf = rng.standard_normal((n_pages, page, n_kv, hd)).astype(np.float32)
+    vf = rng.standard_normal((n_pages, page, n_kv, hd)).astype(np.float32)
+    kf[0] = vf[0] = poison
+    ids = list(rng.permutation(np.arange(1, n_pages)))
+    tbl = np.zeros((bsz, n_tbl), np.int32)
+    for b in range(bsz):
+        for j in range(live[b]):
+            tbl[b, j] = ids.pop()
+    cache = {"block_tbl": jnp.asarray(tbl)}
+    if quantized:
+        from repro.models.kvcache import quantize_kv
+        kq, ks = quantize_kv(jnp.asarray(kf))
+        vq, vs = quantize_kv(jnp.asarray(vf))
+        cache.update(k_pages=kq.reshape(n_pages, page, kvd),
+                     v_pages=vq.reshape(n_pages, page, kvd),
+                     k_scale_pages=ks, v_scale_pages=vs)
+    else:
+        cache.update(k_pages=jnp.asarray(kf.reshape(n_pages, page, kvd)),
+                     v_pages=jnp.asarray(vf.reshape(n_pages, page, kvd)))
+    q = jnp.asarray(rng.standard_normal(
+        (bsz, s, n_kv * gqa, hd)).astype(np.float32))
+    return q, cache, jnp.asarray(q_start), jnp.asarray(n_new)
+
+
+def ragged_reference(q, cache, q_start, n_new, *, n_kv, hd, window=None,
+                     attn_softcap=None):
+    """Reference for the ragged kernel: full-width gather + masked attend
+    at absolute query positions. Rows past a lane's ``n_new`` compute
+    garbage here (the kernel zeroes them) — compare valid rows only."""
+    import jax.numpy as jnp
+    from repro.models.attention import attend, paged_cache_read
+    k_all, v_all = paged_cache_read(cache, jnp.float32, n_kv, hd)
+    bsz, t = k_all.shape[:2]
+    s = q.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(t)[None], (bsz, t))
+    q_pos = q_start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    return attend(q, k_all, v_all, q_positions=q_pos, kv_positions=kv_pos,
+                  kv_valid_len=q_start + n_new, causal=True,
+                  window=window, attn_softcap=attn_softcap)

@@ -1,0 +1,331 @@
+"""Chunked-prefill serving: scheduler invariants + engine semantics.
+
+The refactor that left ONE ragged attention path also rebased prefill
+onto fixed-size chunks that co-schedule with decode lanes. This file pins
+the scheduling contract: the per-round chunk budget is never exceeded
+after a round's first grant, first tokens arrive in FIFO admission order
+for equal work, a lane preempted mid-prompt releases exactly the pages
+its chunks wrote (refcount-clean pool at rest), prefix-cache hits prefill
+only their chunked suffix with unchanged greedy outputs, decode lanes
+keep emitting between a long prompt's chunks, and greedy decode is
+token-identical across ANY chunk size (and to the pre-refactor
+monolithic semantics via the legacy per-slot engine) with bitwise-
+identical published KV pages.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.serve import engine as engine_mod
+from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
+from repro.serve.scheduler import FifoScheduler, SchedulerConfig
+
+BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+            vocab=64)
+CFG = ModelConfig(name="t", family="dense", **BASE)
+CFG_INT8 = ModelConfig(name="t8", family="dense", kv_cache_quant=True,
+                       **BASE)
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def params(serve_cfg, serve_params):
+    assert serve_cfg == CFG
+    return serve_params
+
+
+@pytest.fixture(scope="module")
+def params_int8(serve_cfg_int8, serve_params_int8):
+    assert serve_cfg_int8 == CFG_INT8
+    return serve_params_int8
+
+
+def _reqs(n=4, lo=4, hi=14, max_new=5, seed=5, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=rng.integers(2, vocab, int(L)).astype(
+        np.int32), max_new_tokens=max_new)
+        for i, L in enumerate(rng.integers(lo, hi, size=n))]
+
+
+def _clone(reqs):
+    return [Request(uid=r.uid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id)
+            for r in reqs]
+
+
+# -------------------------------------------------------------------------
+# budget invariant: never exceeded after the first chunk of a round
+# -------------------------------------------------------------------------
+class _RecordingScheduler(FifoScheduler):
+    """Records (round, grant) pairs so the engine's real grant stream can
+    be audited against the budget invariant."""
+    rounds = None
+
+    def start_round(self):
+        super().start_round()
+        type(self).rounds.append([])
+
+    def grant_chunk(self, n_remaining):
+        n = super().grant_chunk(n_remaining)
+        if n:
+            type(self).rounds[-1].append(n)
+        return n
+
+
+def test_chunk_budget_never_exceeded_after_first(params, monkeypatch):
+    _RecordingScheduler.rounds = []
+    monkeypatch.setattr(engine_mod, "FifoScheduler", _RecordingScheduler)
+    budget = 12
+    eng = ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE,
+                      chunk_tokens=PAGE, max_prefill_tokens=budget)
+    eng.run(_reqs(n=6, lo=16, hi=30, max_new=3))
+    rounds = [r for r in _RecordingScheduler.rounds if r]
+    assert rounds, "no chunks were ever granted"
+    for grants in rounds:
+        # the first grant is budget-exempt (anti-deadlock); everything
+        # after it must fit the round budget
+        assert sum(grants[1:]) <= budget, grants
+        assert all(g <= PAGE for g in grants)
+    # the budget really throttled at least one round into multiple grants
+    assert any(len(g) > 1 for g in rounds)
+    assert eng.stats.prefill_chunks == sum(len(g) for g in rounds)
+
+
+def test_wide_first_chunk_ignores_budget(params):
+    """A chunk wider than the whole round budget still runs when it is
+    the round's first grant — long prompts can never deadlock."""
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, page_size=PAGE,
+                      chunk_tokens=32, max_prefill_tokens=8)
+    reqs = _reqs(n=2, lo=30, hi=33, max_new=3)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+
+
+# -------------------------------------------------------------------------
+# TTFT ordering under mixed decode+chunk rounds
+# -------------------------------------------------------------------------
+def test_ttft_follows_admission_order(params):
+    """Equal-length prompts with a one-chunk-per-round budget: first
+    tokens arrive strictly in FIFO admission (uid) order, even while
+    earlier requests' decode lanes co-schedule with later chunks."""
+    rng = np.random.default_rng(9)
+    reqs = [Request(uid=i, prompt=rng.integers(2, 64, 24).astype(np.int32),
+                    max_new_tokens=8) for i in range(4)]
+    first_seen = []
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, page_size=PAGE,
+                      chunk_tokens=PAGE, max_prefill_tokens=PAGE)
+    eng.run(reqs, on_token=lambda s, tok, req:
+            first_seen.append(req.uid) if req.uid not in first_seen
+            else None)
+    assert first_seen == [0, 1, 2, 3]
+    assert len(eng.stats.ttft_s) == 4
+    # chunked prefill interleaved with decode: tokens flowed to earlier
+    # lanes while later prompts were still chunking
+    assert eng.stats.decode_steps > 0
+
+
+def test_decode_lanes_progress_between_chunks(params):
+    """A long prompt's chunks co-schedule with an active decode lane:
+    the decoder receives tokens BEFORE the long prompt's first token."""
+    rng = np.random.default_rng(3)
+    short = Request(uid=0, prompt=rng.integers(2, 64, 4).astype(np.int32),
+                    max_new_tokens=12)
+    long_ = Request(uid=1, prompt=rng.integers(2, 64, 48).astype(np.int32),
+                    max_new_tokens=4)
+    stream = []
+    eng = ServeEngine(CFG, params, slots=2, max_len=64, page_size=PAGE,
+                      chunk_tokens=PAGE, max_prefill_tokens=PAGE)
+    eng.run([short, long_], on_token=lambda s, tok, req:
+            stream.append(req.uid))
+    first_long = stream.index(1)
+    assert stream[:first_long].count(0) >= 3, stream
+    assert short.done and long_.done
+
+
+# -------------------------------------------------------------------------
+# preemption mid-prompt: exactly the chunk-written pages come back
+# -------------------------------------------------------------------------
+def test_mid_prompt_preemption_is_refcount_clean(params):
+    """A pool too small for a growing decoder + a chunking prompt forces
+    preemption mid-prompt; the preempted lane releases exactly the pages
+    its chunks wrote (plus adopted refs), outputs stay identical to the
+    legacy engine, and the pool is empty at rest."""
+    rng = np.random.default_rng(17)
+    reqs = [Request(uid=0, prompt=rng.integers(2, 64, 8).astype(np.int32),
+                    max_new_tokens=24),
+            Request(uid=1, prompt=rng.integers(2, 64, 24).astype(np.int32),
+                    max_new_tokens=4)]
+    legacy = _clone(reqs)
+    LegacyServeEngine(CFG, params, slots=2, max_len=32).run(legacy)
+    eng = ServeEngine(CFG, params, slots=2, max_len=32, page_size=PAGE,
+                      n_pages=5, chunk_tokens=PAGE)
+    eng.run(reqs)
+    assert eng.stats.preemptions >= 1
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in reqs]
+    pool = eng._pool
+    assert pool.free_count == pool.n_pages          # refcount-clean
+    assert pool.pinned_count == 0
+    pool.check_tables()                             # no stale mappings
+
+
+# -------------------------------------------------------------------------
+# prefix-cache hit + chunked suffix parity
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg_name", ["fp32", "int8"])
+def test_prefix_hit_chunked_suffix_parity(cfg_name, params, params_int8):
+    """Tenants sharing a system prompt, with the uncached suffix prefilled
+    in chunks smaller than the suffix: greedy outputs match the cache-off
+    engine and only suffix tokens are prefilled for the followers."""
+    cfg = CFG if cfg_name == "fp32" else CFG_INT8
+    p = params if cfg_name == "fp32" else params_int8
+    rng = np.random.default_rng(23)
+    sys_prompt = rng.integers(2, 64, 24).astype(np.int32)
+    reqs = [Request(uid=i, prompt=np.concatenate(
+        [sys_prompt, rng.integers(2, 64, 18)]).astype(np.int32),
+        max_new_tokens=5) for i in range(5)]
+    off = _clone(reqs)
+    ServeEngine(cfg, p, slots=3, max_len=64, page_size=PAGE,
+                chunk_tokens=PAGE).run(off)
+    on = _clone(reqs)
+    eng = ServeEngine(cfg, p, slots=3, max_len=64, page_size=PAGE,
+                      chunk_tokens=PAGE, prefix_cache=True)
+    eng.run(on)
+    assert [r.out_tokens for r in off] == [r.out_tokens for r in on]
+    s = eng.stats
+    assert s.cache_hits >= 4                        # every follower hits
+    assert s.cache_hit_tokens >= 4 * 24
+    assert s.prefill_token_reduction > 0.3
+    # suffix (18+ tokens) really was chunked: more chunks than prompts
+    assert s.prefill_chunks > s.prefills
+
+
+# -------------------------------------------------------------------------
+# any chunk size == monolithic == legacy, token for token; published KV
+# pages bitwise-identical across chunk sizes
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("cfg_name", ["fp32", "int8"])
+def test_chunk_size_invariance_tokens_and_pages(cfg_name, params,
+                                                params_int8):
+    cfg = CFG if cfg_name == "fp32" else CFG_INT8
+    p = params if cfg_name == "fp32" else params_int8
+    rng = np.random.default_rng(29)
+    prompt = rng.integers(2, 64, 27).astype(np.int32)
+
+    def run(chunk):
+        req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=4)
+        eng = ServeEngine(cfg, p, slots=1, max_len=48, page_size=PAGE,
+                          chunk_tokens=chunk, prefix_cache=True)
+        eng.run([req])
+        # published full-page prompt KV, in logical page order
+        ids, n = eng.prefix_cache.match(prompt)
+        assert n == (len(prompt) // PAGE) * PAGE
+        pages = {}
+        for key, grp in eng._arena.items():
+            for name, leaf in grp["attn"].items():
+                if name.endswith("_pages"):
+                    pages[f"{key}/{name}"] = np.asarray(leaf[:, ids])
+        return req.out_tokens, pages
+
+    legacy_req = Request(uid=0, prompt=prompt.copy(), max_new_tokens=4)
+    LegacyServeEngine(cfg, p, slots=1, max_len=48).run([legacy_req])
+    ref_toks, ref_pages = run(64)                   # monolithic
+    assert ref_toks == legacy_req.out_tokens        # pre-refactor parity
+    for chunk in (1, 3, PAGE, PAGE + 3, 2 * PAGE):
+        toks, pages = run(chunk)
+        assert toks == ref_toks, chunk
+        assert pages.keys() == ref_pages.keys()
+        for name in pages:
+            np.testing.assert_array_equal(pages[name], ref_pages[name],
+                                          err_msg=f"chunk={chunk} {name}")
+
+
+@pytest.mark.kernel
+def test_chunk_size_invariance_through_kernel(params):
+    """Same invariance with every step's attention on the ragged Pallas
+    kernel, and the kernel really streamed fewer pages than full width."""
+    reqs = _reqs(n=4, lo=10, hi=26, max_new=5, seed=31)
+    ref = _clone(reqs)
+    ServeEngine(CFG, params, slots=2, max_len=32, page_size=PAGE).run(ref)
+    for chunk in (PAGE, 2 * PAGE):
+        got = _clone(reqs)
+        eng = ServeEngine(CFG, params, slots=2, max_len=32, page_size=PAGE,
+                          chunk_tokens=chunk, paged_attention=True)
+        eng.run(got)
+        assert [r.out_tokens for r in ref] == [r.out_tokens for r in got]
+        s = eng.stats
+        assert 0 < s.kv_pages_live < s.kv_pages_full
+        assert s.prefill_kv_pages_live > 0
+        assert s.prefill_kv_pages_written > 0
+
+
+# -------------------------------------------------------------------------
+# step-shape bound: the compile surface is {1, chunk}, not a bucket zoo
+# -------------------------------------------------------------------------
+def test_step_widths_bounded_to_two_shapes(params, monkeypatch):
+    eng = ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE,
+                      chunk_tokens=2 * PAGE)
+    eng._ensure_pool()
+    widths = set()
+    real_step = eng._steps.step
+
+    def spy(params_, toks, arena, start, n_new):
+        widths.add(toks.shape[1])
+        return real_step(params_, toks, arena, start, n_new)
+
+    object.__setattr__(eng._steps, "step", spy)
+    eng.run(_reqs(n=8, lo=4, hi=30, max_new=4, seed=37))
+    assert widths <= {1, 2 * PAGE}, widths
+    assert len(widths) == 2                        # both shapes exercised
+
+
+# -------------------------------------------------------------------------
+# hybrid (SSM) stacks: idle lanes in mixed rounds are state-neutral
+# -------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 3, 7, 11])
+def test_hybrid_chunked_idle_lane_state_neutral(seed):
+    """A decode lane idling through another prompt's chunk rounds
+    (n_new = 0 — hybrid stacks cannot co-schedule) must not advance its
+    SSM/conv state on the padding token. The 17-token prompt forces a
+    1-token final chunk, i.e. a C = 1 chunk round through mamba's s == 1
+    recurrence — the path that once ignored ``valid_len`` and corrupted
+    the idle lane (caught in review: divergent greedy tokens on 11/12
+    seeds before the fix)."""
+    cfg = ModelConfig(name="th", family="hybrid", pattern=("hybrid",),
+                      d_state=16, ssm_headdim=32, **BASE)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=0, prompt=rng.integers(2, 64, 5).astype(np.int32),
+                    max_new_tokens=10),
+            Request(uid=1, prompt=rng.integers(2, 64, 17).astype(np.int32),
+                    max_new_tokens=4)]
+    legacy = _clone(reqs)
+    LegacyServeEngine(cfg, p, slots=2, max_len=32).run(legacy)
+    got = _clone(reqs)
+    ServeEngine(cfg, p, slots=2, max_len=32, page_size=PAGE,
+                chunk_tokens=16).run(got)
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in got]
+
+
+# -------------------------------------------------------------------------
+# in-flight dedup rebased onto chunk boundaries: followers wait for the
+# leader's prefill to complete, then alias fully-written pages only
+# -------------------------------------------------------------------------
+def test_dedup_waits_for_chunking_leader(params):
+    rng = np.random.default_rng(41)
+    shared = rng.integers(2, 64, 24).astype(np.int32)
+    reqs = [Request(uid=i, prompt=shared.copy(), max_new_tokens=4)
+            for i in range(3)]
+    legacy = _clone(reqs)
+    LegacyServeEngine(CFG, params, slots=3, max_len=48).run(legacy)
+    eng = ServeEngine(CFG, params, slots=3, max_len=48, page_size=PAGE,
+                      chunk_tokens=PAGE)       # leader needs 3 chunks
+    eng.run(reqs)
+    assert eng.stats.dedup_hits == 2
+    # whole-prompt hit: the final token recomputes, so 23 of 24 tokens
+    # come from the leader's pages per follower
+    assert eng.stats.cache_hit_tokens == 2 * 23
+    # followers never re-prefilled the shared pages
+    assert eng.stats.prefill_tokens == 24 + 2 * 1  # leader + recomputes
+    assert [r.out_tokens for r in legacy] == [r.out_tokens for r in reqs]

@@ -134,6 +134,69 @@ def test_kv_traffic_live_only_matches_kernel_gather(serve_cfg,
         kv_traffic_paged(serve_cfg, [8], page=page, live_only=False)
 
 
+@pytest.mark.kernel
+def test_kv_traffic_chunked_matches_engine_counters(serve_cfg,
+                                                    serve_params):
+    """Chunk-granular Eq. (3)/(4) prefill traffic: the pages
+    ``kv_traffic_chunked`` charges per prompt equal — page for page —
+    what the engine records while driving the ragged kernel through a
+    chunked-prefill workload (``prefill_kv_pages_live`` mirrors the
+    kernel's per-q-block stream, ``prefill_kv_pages_written`` the
+    page-rounded chunk scatters)."""
+    import inspect
+
+    import numpy as np
+    from repro.kernels.paged_attention import Q_BLOCK
+    from repro.memsys.workload import (chunk_pages_streamed,
+                                       kv_traffic_chunked)
+    from repro.serve.engine import Request, ServeEngine
+
+    # the DSE's default q-block must mirror the kernel tiling it models
+    assert inspect.signature(chunk_pages_streamed).parameters[
+        "q_block"].default == Q_BLOCK
+
+    page, chunk = 8, 8
+    prompt_lens = [4, 9, 20, 17]          # sub-page / ragged / multi-chunk
+    rng = np.random.default_rng(13)
+    reqs = [Request(uid=i, prompt=rng.integers(
+        2, serve_cfg.vocab, L).astype(np.int32), max_new_tokens=3)
+        for i, L in enumerate(prompt_lens)]
+    eng = ServeEngine(serve_cfg, serve_params, slots=4, max_len=32,
+                      page_size=page, chunk_tokens=chunk,
+                      paged_attention=True)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+
+    traffics = [kv_traffic_chunked(serve_cfg, L, chunk=chunk, page=page)
+                for L in prompt_lens]
+    assert eng.stats.prefill_kv_pages_live == sum(
+        t.kv_pages_read for t in traffics)
+    assert eng.stats.prefill_kv_pages_written == sum(
+        t.kv_pages_written for t in traffics)
+    assert eng.stats.prefill_chunks == sum(t.n_chunks for t in traffics)
+
+    # unit semantics of the account itself
+    t = kv_traffic_chunked(serve_cfg, 20, chunk=8, page=8)
+    assert t.n_chunks == 3                       # 8 + 8 + 4
+    assert t.kv_pages_written == 3               # ceil(20/8) pages once
+    # chunk reads: [0,8)->1 page, [8,16)->2, [16,20)->3
+    assert t.kv_pages_read == 1 + 2 + 3
+    assert t.kv_pages_read_monolithic == chunk_pages_streamed(
+        0, 20, page=8, q_block=16)
+    assert t.kv_read_bits > 0 and t.kv_write_bits > 0
+    base = make_traffic(serve_cfg, "fp16", seq_len=32)
+    amort = t.apply(base, amortize_tokens=16)
+    assert amort.kv_bits == pytest.approx(
+        base.kv_bits + (t.kv_read_bits + t.kv_write_bits) / 16)
+    with pytest.raises(ValueError):
+        kv_traffic_chunked(serve_cfg, 16, chunk=8, cached_len=5)
+
+    # decode view: one q block, one token -> ceil(seq/page), the same
+    # rule kv_traffic_paged charges per lane
+    assert chunk_pages_streamed(12, 1, page=8) == 2
+    assert chunk_pages_streamed(0, 0, page=8) == 0
+
+
 def test_system_gains_order(hymba):
     """QMC beats FP16 and 4-bit DRAM baselines on energy and latency."""
     sys_cfg = MemSystemConfig()

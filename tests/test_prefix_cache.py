@@ -11,7 +11,7 @@ from repro.models.model import init_params
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged_kv import PageAccountingError, PagedKVPool
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import Admission, FifoScheduler, SchedulerConfig
+from repro.serve.scheduler import FifoScheduler, SchedulerConfig
 
 BASE = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
             vocab=64)
@@ -352,29 +352,27 @@ def test_choose_victim_breaks_stamp_ties_by_slot_id():
     assert sched.choose_victim(1) is None            # no younger slot
 
 
-def test_degraded_hit_respects_round_budget():
-    """A hit admission is budgeted for its suffix bucket only; when the
-    engine degrades it to a full uncached prefill, the difference must
-    re-pass the round budget — except for the round's first admission
-    (the anti-deadlock exemption ``next_admission`` already grants)."""
-    class _Req:
-        prompt = np.zeros(64, np.int32)
-
-    sched = FifoScheduler(SchedulerConfig(page=PAGE,
-                                          max_prefill_tokens=32))
+def test_grant_chunk_round_budget():
+    """Per-round chunk grants: the round's FIRST grant ignores the token
+    budget (anti-deadlock — a chunk wider than the budget must still
+    run), every later grant is capped by what is left, and a spent
+    budget idles further lanes until the next round."""
+    sched = FifoScheduler(SchedulerConfig(page=PAGE, chunk=16,
+                                          max_prefill_tokens=24))
     sched.start_round()
-    sched._round_first = False                       # earlier admission
-    sched._round_budget = 16
-    adm = Admission(req=_Req(), cached_len=56)       # suffix bucket = 8
-    assert sched.upgrade_budget(adm) is False        # extra 56 > 16 left
-    assert sched._round_budget == 16                 # nothing charged
-    first = Admission(req=_Req(), cached_len=56, first_in_round=True)
-    assert sched.upgrade_budget(first) is True       # exempt, charged
-    assert sched._round_budget == 16 - (64 - 8)
-    sched._round_budget = 64
-    fits = Admission(req=_Req(), cached_len=56)
-    assert sched.upgrade_budget(fits) is True
-    assert sched._round_budget == 64 - 56
+    assert sched.grant_chunk(64) == 16               # first: full chunk
+    assert sched.grant_chunk(64) == 8                # capped by remainder
+    assert sched.grant_chunk(64) == 0                # budget spent
+    sched.start_round()
+    assert sched.grant_chunk(5) == 5                 # remainder < chunk
+    assert sched.grant_chunk(64) == 16
+    assert sched.grant_chunk(64) == 3
+    # a chunk wider than the whole budget still runs when it is first
+    wide = FifoScheduler(SchedulerConfig(page=PAGE, chunk=64,
+                                         max_prefill_tokens=32))
+    wide.start_round()
+    assert wide.grant_chunk(100) == 64
+    assert wide.grant_chunk(100) == 0
 
 
 # -------------------------------------------------------------------------

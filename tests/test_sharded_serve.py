@@ -229,10 +229,11 @@ def requests(cfg, n=4, seed=5, max_new=4):
                     max_new_tokens=max_new)
             for i, L in enumerate(rng.integers(4, 14, size=n))]
 
-def run(cfg, params, mesh, paged_attention=False):
+def run(cfg, params, mesh, paged_attention=False, chunk=None):
     reqs = requests(cfg)
     eng = ServeEngine(cfg, params, slots=4, max_len=32, page_size=8,
                       n_pages=15, mesh=mesh,   # 15+1 null: splits on data
+                      chunk_tokens=chunk,
                       paged_attention=paged_attention)
     eng.run(reqs)
     return [r.out_tokens for r in reqs]
@@ -245,11 +246,15 @@ for label, cfg in (("fp32", CFG), ("int8kv", CFG8)):
     ref, one, four = run(cfg, p, None), run(cfg, p, m1), run(cfg, p, m4)
     out[label] = {"nomesh_eq_m1": ref == one, "m1_eq_m4": one == four,
                   "tokens": sum(len(t) for t in ref)}
-    # Pallas paged-attention kernel, shard-local on the 2x2 mesh (pages
-    # over data with the flash-decoding softmax merge, KV heads over
-    # model): token-identical to the unsharded reference gather
+    # ragged Pallas paged-attention kernel, shard-local on the 2x2 mesh
+    # (pages over data with the flash-decoding softmax merge, KV heads
+    # over model): token-identical to the unsharded reference gather,
+    # for monolithic AND chunked prefill (chunks co-schedule with
+    # decode lanes inside the sharded step)
     kern = run(cfg, p, m4, paged_attention=True)
     out[label]["kernel_m4_eq_ref"] = kern == ref
+    chunked = run(cfg, p, m4, paged_attention=True, chunk=8)
+    out[label]["chunked_kernel_m4_eq_ref"] = chunked == ref
 # QMC serving format: quantize-after-shard at TP=2, same weights both runs
 pq = quantize_for_serving(init_params(CFGQ, jax.random.PRNGKey(0)),
                           QMCConfig(rho=0.3, granularity="subtile"),
@@ -283,6 +288,7 @@ def test_sharded_greedy_parity_4dev():
         assert out[label]["nomesh_eq_m1"], out
         assert out[label]["m1_eq_m4"], out
         assert out[label]["kernel_m4_eq_ref"], out
+        assert out[label]["chunked_kernel_m4_eq_ref"], out
         assert out[label]["tokens"] > 0
     assert out["sqt"]["n_sharded_qtensors"] >= 6, out
     assert out["sqt"]["m1_eq_m4"], out
