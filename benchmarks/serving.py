@@ -14,7 +14,10 @@ against the QMC deployment format (the paper's configuration). The sharded
 section re-runs the paged engine in a subprocess under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` on a (2 data, 2
 model) mesh — token parity with the single-device engine plus the
-per-shard Eq. (3)/(4) traffic split.
+per-shard Eq. (3)/(4) traffic split. The phase-breakdown section splits
+each configuration's wall clock into host / device / compile shares from
+the engine's phase accounting (``repro.obs``) for fp32-vs-qmc decode and
+cached-vs-uncached prefill.
 
   PYTHONPATH=src python -m benchmarks.serving
 """
@@ -72,7 +75,10 @@ def _tenant_requests(seed: int = 11):
 
 
 def _pcts(lat):
-    if not lat:
+    """p50/p95 of a latency sample list; zeros (not a crash) when the
+    sample is empty — callers mark those sections degenerate."""
+    lat = np.asarray(lat, dtype=float).ravel()
+    if lat.size == 0:
         return 0.0, 0.0
     return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)))
 
@@ -84,12 +90,15 @@ def _measure(engine_cls, params, slots: int, **kw):
     eng = engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw)
     out = eng.run(_requests())
     toks = sum(len(r.out_tokens) for r in out)
-    p50, p95 = _pcts(eng.stats.per_token_latencies())
+    lat = eng.stats.per_token_latencies()
+    p50, p95 = _pcts(lat)
     return {"tokens": toks, "tokens_per_s": toks / eng.stats.wall_s,
             "wall_s": eng.stats.wall_s, "decode_calls":
             eng.stats.decode_steps, "prefills": eng.stats.prefills,
             "p50_token_latency_us": p50 * 1e6,
             "p95_token_latency_us": p95 * 1e6,
+            "latency_samples": len(lat),
+            "degenerate": len(lat) == 0,
             "preemptions": eng.stats.preemptions,
             "pages_peak": eng.stats.pages_peak}
 
@@ -127,6 +136,7 @@ def run() -> dict:
     results["weights"] = _measure_weights(params)
     results["paged_attention"] = _measure_paged_attention(params)
     results["chunked_prefill"] = _measure_chunked(params)
+    results["phase_breakdown"] = _measure_phases(params)
     results["sharded"] = _measure_sharded()
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
@@ -297,7 +307,14 @@ def _measure_chunked(params) -> dict:
         res = eng.run(_mixed_requests())
         s = eng.stats
         ttft50, ttft95 = _pcts(s.ttft_s)
-        itl50, itl95 = _pcts(s.per_token_latencies())
+        # ITL from per-request emission timestamps: a decode lane's true
+        # gap between consecutive tokens, including rounds it sat out
+        # while a co-scheduled prefill chunk ran — the jitter chunking is
+        # supposed to bound. The round-averaged step latency (wall/tokens
+        # per round) is kept alongside: it hides exactly that jitter.
+        itl = s.itl_s()
+        itl50, itl95 = _pcts(itl)
+        ravg50, ravg95 = _pcts(s.per_token_latencies())
         toks[label] = [r.out_tokens for r in res]
         out[label] = {
             "tokens": sum(len(r.out_tokens) for r in res),
@@ -305,6 +322,9 @@ def _measure_chunked(params) -> dict:
             "prefill_chunks": s.prefill_chunks,
             "ttft_p50_us": ttft50 * 1e6, "ttft_p95_us": ttft95 * 1e6,
             "itl_p50_us": itl50 * 1e6, "itl_p95_us": itl95 * 1e6,
+            "itl_samples": len(itl),
+            "itl_round_avg_p50_us": ravg50 * 1e6,
+            "itl_round_avg_p95_us": ravg95 * 1e6,
             "prefill_kv_pages_live": s.prefill_kv_pages_live,
             "prefill_kv_pages_written": s.prefill_kv_pages_written}
     out["token_parity"] = toks["monolithic"] == toks["chunked"]
@@ -326,6 +346,66 @@ def _measure_chunked(params) -> dict:
           f"ttft_p95={out['chunked']['ttft_p95_us']:.0f}us"
           f"(mono {out['monolithic']['ttft_p95_us']:.0f}us) "
           f"chunk_pages={out['chunked']['prefill_kv_pages_live']}")
+    return out
+
+
+def _phase_row(cold, eng) -> dict:
+    """Phase shares of one warm run + compile attribution from the cold
+    run that preceded it (same engine geometry, fresh jit cache)."""
+    s = eng.stats
+    wall = max(s.wall_s, 1e-9)
+    cold_wall = max(cold.stats.wall_s, 1e-9)
+    return {
+        "wall_s": s.wall_s, "rounds": s.rounds,
+        "tokens_per_s": s.tokens_per_s,
+        "host_s": s.host_seconds(), "device_s": s.device_seconds(),
+        "host_share": s.host_seconds() / wall,
+        "device_share": s.device_seconds() / wall,
+        "phase_seconds": {k: round(v, 6)
+                          for k, v in sorted(s.phase_seconds.items())},
+        "adopt_calls": s.adopt_calls,
+        "page_copy_calls": s.page_copy_calls,
+        "device_tables_rebuilds": s.device_tables_rebuilds,
+        "jit_compiles_warm": s.jit_compiles,
+        "cold_jit_compiles": cold.stats.jit_compiles,
+        "cold_compile_s": cold.stats.jit_compile_s,
+        "cold_compile_share": cold.stats.jit_compile_s / cold_wall}
+
+
+def _measure_phases(params) -> dict:
+    """Where a round's wall time goes: host bookkeeping vs device step vs
+    jit compilation, from the engine's always-on ``phase_seconds``
+    accounting (no tracer needed). Two comparisons the open roadmap items
+    hinge on: fp32-vs-qmc decode (is the qmc slowdown device math or host
+    overhead?) and cached-vs-uncached multi-tenant prefill (how much of
+    the prefix-cache regression is adopt/COW/table host round trips?)."""
+    def pair(p, reqs_fn, **kw):
+        cold = ServeEngine(CFG, p, slots=4, max_len=MAX_LEN,
+                           page_size=PAGE, **kw)
+        cold.run(reqs_fn())            # pays the jit compiles
+        eng = ServeEngine(CFG, p, slots=4, max_len=MAX_LEN,
+                          page_size=PAGE, **kw)
+        eng.run(reqs_fn())             # steady state
+        return _phase_row(cold, eng)
+
+    qparams = quantize_for_serving(
+        params, QMCConfig(rho=0.3, granularity="subtile"), tp_shards=1,
+        min_dim=64)
+    out = {"decode": {"fp32": pair(params, _requests),
+                      "qmc": pair(qparams, _requests)},
+           "prefill": {"uncached": pair(params, _tenant_requests),
+                       "cached": pair(params, _tenant_requests,
+                                      prefix_cache=True)}}
+    d, p = out["decode"], out["prefill"]
+    print(f"serving/phases_decode_s4,0,"
+          f"fp32_host={d['fp32']['host_share']:.0%} "
+          f"qmc_host={d['qmc']['host_share']:.0%} "
+          f"qmc_device={d['qmc']['device_share']:.0%}")
+    print(f"serving/phases_prefix_s4,0,"
+          f"uncached_host={p['uncached']['host_share']:.0%} "
+          f"cached_host={p['cached']['host_share']:.0%} "
+          f"adopts={p['cached']['adopt_calls']} "
+          f"tbl_rebuilds={p['cached']['device_tables_rebuilds']}")
     return out
 
 

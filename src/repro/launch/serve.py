@@ -12,6 +12,12 @@ the engine uses everywhere: ``--data-shards D --model-shards M`` builds a
 the paged step set explicitly, and hands it to ``ServeEngine``. Run under
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to demo on a CPU
 host.
+
+Observability: ``--trace-out t.json`` writes a Perfetto-loadable Chrome
+trace of the run (round phase spans + request lifecycle instants, see
+``repro.obs.trace``), ``--metrics-out m.json`` snapshots the ``serve_*``
+metrics registry (``repro.obs.metrics``), and ``--profile DIR`` wraps the
+run in ``jax.profiler.trace`` for an XLA-level TensorBoard profile.
 """
 from __future__ import annotations
 
@@ -26,6 +32,8 @@ from repro.core.qconfig import QMCConfig
 from repro.core.serving_quant import quantize_for_serving
 from repro.launch import mesh as meshlib
 from repro.models.model import init_params
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import steps as serve_steps
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged_kv import pages_for
@@ -33,8 +41,9 @@ from repro.serve.paged_kv import pages_for
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -66,6 +75,17 @@ def main():
                     help="mesh 'model' axis: TP over heads / FFN / "
                          "quantized weight shards")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--trace-out", metavar="PATH",
+                    help="write a Chrome trace-event JSON of the run "
+                         "(load in Perfetto / chrome://tracing): per-round "
+                         "phase spans plus request-lifecycle and "
+                         "scheduler/cache instants")
+    ap.add_argument("--metrics-out", metavar="PATH",
+                    help="write a JSON snapshot of the serve_* metrics "
+                         "registry after the run")
+    ap.add_argument("--profile", metavar="DIR",
+                    help="wrap the run in jax.profiler.trace(DIR) "
+                         "(TensorBoard-loadable XLA profile)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(
@@ -114,17 +134,39 @@ def main():
         n_pages=n_pages, max_slots=args.slots,
         max_pages_per_seq=mpps, chunk=chunk,
         paged_attention=args.paged_attention)
+    tracer = None
+    if args.trace_out:
+        tracer = obs_trace.Tracer(enabled=True)
+        # install as the process default so deep call sites (scheduler,
+        # prefix cache, jit wrappers) emit into the same trace
+        obs_trace.set_tracer(tracer)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=max_len,
                       page_size=args.page_size, mesh=mesh,
                       step_set=step_set, chunk_tokens=chunk,
                       prefix_cache=args.prefix_cache,
-                      paged_attention=args.paged_attention)
-    eng.run(reqs)
+                      paged_attention=args.paged_attention,
+                      tracer=tracer)
+    if args.profile:
+        with jax.profiler.trace(args.profile):
+            eng.run(reqs)
+        print(f"[serve] XLA profile written under {args.profile}")
+    else:
+        eng.run(reqs)
     s = eng.stats
+    if tracer is not None:
+        n_ev = tracer.export(args.trace_out)
+        print(f"[serve] trace: {n_ev} events -> {args.trace_out}")
+    if args.metrics_out:
+        obs_metrics.get_registry().write_json(args.metrics_out)
+        print(f"[serve] metrics snapshot -> {args.metrics_out}")
     print(f"[serve] {s.prefills} prefills ({s.prefill_chunks} chunks of "
           f"<= {chunk} tokens), {s.decode_steps} decode steps, "
           f"{s.tokens_out} tokens in {s.wall_s:.2f}s "
           f"({s.tokens_per_s:.1f} tok/s)")
+    if s.phase_seconds:
+        print(f"[serve] phases: host={s.host_seconds():.2f}s "
+              f"device={s.device_seconds():.2f}s over {s.rounds} rounds "
+              f"({s.jit_compiles} jit compiles, ~{s.jit_compile_s:.2f}s)")
     if args.chunked_prefill and s.ttft_s:
         import numpy as _np
         print(f"[serve] chunked prefill: TTFT p50="

@@ -1,0 +1,25 @@
+"""Serving observability: metrics registry + Chrome-trace span tracer.
+
+Two host-side modules the serving stack records itself through:
+
+  * ``obs.metrics`` — counters / gauges / fixed-log-bucket histograms
+    with labels, behind a get-or-create :class:`~repro.obs.metrics.
+    Registry`; snapshot-to-JSON and Prometheus text exposition. The
+    metric naming contract lives in its module docstring.
+  * ``obs.trace`` — a span :class:`~repro.obs.trace.Tracer` (context-
+    manager API, near-zero overhead when disabled, instant events for
+    point occurrences) exporting Chrome trace-event JSON loadable in
+    Perfetto. The span/event naming contract lives in its module
+    docstring.
+
+Both keep a process-default instance (``get_registry`` / ``get_tracer``)
+so deep call sites — the steps.py jit-compile wrappers, scheduler wait
+events — need no plumbing; engines and tests may pass explicit instances
+instead. ``launch/serve.py --trace-out/--metrics-out`` turns the
+defaults on and writes both files after a run.
+"""
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               Registry, get_registry, log_buckets,
+                               set_registry)
+from repro.obs.trace import (Tracer, active, get_tracer,  # noqa: F401
+                             set_tracer)

@@ -24,13 +24,15 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.memsys.workload import chunk_pages_streamed
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.models.config import ModelConfig
 from repro.models.model import prefill
 from repro.serve import steps as serve_steps
@@ -89,6 +91,31 @@ class EngineStats:
     # per request (first emission only — a preempted request's recompute
     # does not reset its clock): seconds from run() start to first token
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    # --- observability (obs/) ------------------------------------------
+    rounds: int = 0                  # engine rounds that ran a jit step
+    # host↔device page-op round trips (the prefix-cache 0.41x suspects):
+    # adopt_calls/device_tables_rebuilds are fed by PagedKVPool counters
+    # (serve/paged_kv.py), page_copy_calls counts the engine's COW
+    # page-copy dispatches (the device half of pool.cow)
+    adopt_calls: int = 0
+    page_copy_calls: int = 0
+    device_tables_rebuilds: int = 0
+    # serving-jit compiles observed during this run (TracedJit deltas
+    # over the step set — nonzero on a warm engine means an unexpected
+    # retrace) and the wall seconds those compiling calls took
+    jit_compiles: int = 0
+    jit_compile_s: float = 0.0
+    # cumulative wall seconds per round phase (span names per the
+    # obs/trace.py contract: round/admit .. round/emit) — recorded even
+    # with tracing disabled, so benchmarks can attribute host vs device
+    # vs compile share without parsing a trace file
+    phase_seconds: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    # per-request emission timestamps (time.monotonic), keyed by uid —
+    # the source of truth for inter-token latency; a preempted request's
+    # discarded emissions are dropped with its tokens
+    emit_times: Dict[int, List[float]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -110,6 +137,29 @@ class EngineStats:
         return [s / t for s, t in zip(self.step_seconds, self.step_tokens)
                 if t]
 
+    def itl_s(self) -> List[float]:
+        """Per-request inter-token latencies from emission timestamps.
+
+        Gaps between consecutive emissions of the same request — the
+        decode-lane experience — unlike ``per_token_latencies`` which
+        averages a whole round over every token it emitted and so lets
+        co-scheduled prefill chunks inflate decode ITL."""
+        gaps: List[float] = []
+        for times in self.emit_times.values():
+            gaps.extend(b - a for a, b in zip(times, times[1:]))
+        return gaps
+
+    def host_seconds(self) -> float:
+        """Wall seconds in host-side round phases (everything but the
+        jitted device step)."""
+        return sum(v for k, v in self.phase_seconds.items()
+                   if k != "round/device_step")
+
+    def device_seconds(self) -> float:
+        """Wall seconds in the device step phase (includes jit compile
+        time on cold geometries — ``jit_compile_s`` bounds that part)."""
+        return self.phase_seconds.get("round/device_step", 0.0)
+
 
 def _finished(req: Request, pos: int, max_len: int) -> bool:
     """Termination test shared by both engines (applied after each emit):
@@ -121,6 +171,32 @@ def _finished(req: Request, pos: int, max_len: int) -> bool:
             or (req.eos_id is not None and req.out_tokens
                 and req.out_tokens[-1] == req.eos_id)
             or pos >= max_len)
+
+
+class _PhaseSpan:
+    """Times one round phase: accumulates into ``EngineStats.
+    phase_seconds``, observes the ``serve_phase_seconds{phase}``
+    histogram, and (when tracing is on) records the span on the tracer.
+    A plain class CM so the round loop pays two ``perf_counter`` calls
+    per phase, nothing more, with tracing disabled."""
+
+    __slots__ = ("name", "tracer", "hist", "stats", "t0")
+
+    def __init__(self, name, tracer, hist, stats):
+        self.name, self.tracer, self.hist = name, tracer, hist
+        self.stats = stats
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.perf_counter() - self.t0
+        ph = self.stats.phase_seconds
+        ph[self.name] = ph.get(self.name, 0.0) + dt
+        self.hist.observe(dt, phase=self.name)
+        self.tracer.complete(self.name, self.t0, dt)
+        return False
 
 
 # ==========================================================================
@@ -170,6 +246,16 @@ class ServeEngine:
     All step functions come from ``serve/steps.py`` — the same builder
     layer ``launch/serve.py`` uses — either built here or passed in
     prebuilt via ``step_set``.
+
+    ``tracer`` / ``metrics`` plug the engine into the obs subsystem
+    (``repro.obs``): every round records phase spans (``round/admit`` /
+    ``round/grant`` / ``round/host_prep`` / ``round/device_step`` /
+    ``round/emit``) and request lifecycle instants per the
+    ``obs/trace.py`` naming contract, plus counters/histograms per the
+    ``obs/metrics.py`` contract. Both default to the process-wide
+    instances (``obs.trace.get_tracer()`` is disabled until e.g.
+    ``launch/serve.py --trace-out`` turns it on, so the default engine
+    pays one branch per span site).
     """
 
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 4,
@@ -180,7 +266,9 @@ class ServeEngine:
                  prefix_cache: bool = False, mesh=None,
                  step_set: Optional[serve_steps.PagedServeSteps] = None,
                  inflight_dedup: Optional[bool] = None,
-                 paged_attention: bool = False):
+                 paged_attention: bool = False,
+                 tracer: Optional[obs_trace.Tracer] = None,
+                 metrics: Optional[obs_metrics.Registry] = None):
         if cfg.is_encdec or cfg.n_vis_tokens:
             raise NotImplementedError(
                 "paged engine covers decoder-only models; use "
@@ -212,6 +300,8 @@ class ServeEngine:
             self.max_pages_per_seq, page_size)
         self.stats = EngineStats()
         self.paged_attention = paged_attention
+        self._tracer = tracer          # None -> process default at run()
+        self._metrics = metrics
         self._dedup = attn_only if inflight_dedup is None \
             else inflight_dedup
         # co-scheduling a 1-token decode into a C-wide step is bitwise
@@ -269,7 +359,8 @@ class ServeEngine:
                     self._arena,
                     shd.shard_paged_cache_tree(self._arena, self.mesh))
             if self._use_prefix:
-                self.prefix_cache = PrefixCache(self._pool)
+                self.prefix_cache = PrefixCache(self._pool,
+                                                tracer=self._tracer)
         return self._pool
 
     def _alloc(self, slot: int, n_tokens: int) -> Optional[List[int]]:
@@ -306,6 +397,19 @@ class ServeEngine:
                 raise ValueError(f"request {r.uid}: prompt length "
                                  f"{len(r.prompt)} > max_len={self.max_len}")
         pool = self._ensure_pool()
+        # observability plumbing: explicit tracer/registry or the process
+        # defaults (the default tracer is disabled — every span site is
+        # then a single branch)
+        trc = obs_trace.active(self._tracer)
+        reg = self._metrics if self._metrics is not None \
+            else obs_metrics.get_registry()
+        phase_hist = reg.histogram(
+            "serve_phase_seconds", "per-round phase wall time",
+            labels=("phase",))
+
+        def phase(name: str) -> _PhaseSpan:
+            return _PhaseSpan(name, trc, phase_hist, self.stats)
+
         # the pool persists across runs: release slot pages a previously
         # aborted run may have left mapped (cached pages survive), and
         # re-base cumulative counters so stats cover this run only
@@ -314,11 +418,15 @@ class ServeEngine:
                 pool.free_slot(s)
         pool.pages_peak = pool.used_count
         cow0 = pool.cow_copies
+        adopt0 = pool.adopt_calls
+        tbl0 = pool.tables_rebuilds
+        _, jitc0, jits0 = self._steps.jit_counters()
+        admissions = {"miss": 0, "hit": 0, "dedup": 0}
         cache = self.prefix_cache
         sched = FifoScheduler(SchedulerConfig(
             page=self.page, max_prefill_tokens=self.max_prefill_tokens,
             max_len=self.max_len, chunk=self.chunk), prefix_cache=cache,
-            pool=pool if self._dedup else None)
+            pool=pool if self._dedup else None, tracer=trc)
         for r in requests:
             sched.enqueue(r)
 
@@ -332,9 +440,12 @@ class ServeEngine:
                     and pos[s] < len(active[s].prompt))
 
         def emit(s: int, tok: int, req: Request) -> None:
+            now = time.monotonic()
+            self.stats.emit_times.setdefault(req.uid, []).append(now)
             if req.uid not in seen_first:
                 seen_first.add(req.uid)
-                self.stats.ttft_s.append(time.monotonic() - t0)
+                self.stats.ttft_s.append(now - t0)
+                trc.instant("req/first_token", uid=req.uid, slot=s)
             if on_token is not None:
                 on_token(s, tok, req)
 
@@ -346,18 +457,25 @@ class ServeEngine:
                     cache.insert(req.prompt, pool.slot_pages[s][:n_full])
 
         def finish(s: int) -> None:
-            active[s].done = True
+            req = active[s]
+            req.done = True
             active[s] = None
             pool.free_slot(s)
             sched.on_finish(s)
+            trc.instant("req/finished", uid=req.uid, slot=s,
+                        tokens=len(req.out_tokens))
 
         def preempt(victim: int) -> None:
             req = active[victim]
             # recompute-style eviction: drop generated state, requeue; a
             # lane preempted mid-prompt has emitted nothing and releases
             # exactly the pages its chunks wrote (plus adopted refs)
+            trc.instant("req/preempted", uid=req.uid, slot=victim,
+                        discarded=len(req.out_tokens))
             self.stats.tokens_out -= len(req.out_tokens)
             self.stats.tokens_discarded += len(req.out_tokens)
+            # discarded emissions must not contribute inter-token gaps
+            self.stats.emit_times.pop(req.uid, None)
             req.out_tokens = []
             active[victim] = None
             pool.free_slot(victim)
@@ -386,6 +504,7 @@ class ServeEngine:
                 cow = pool.cow(s, start)
             if cow is not None:
                 self._arena = self._steps.page_copy(self._arena, *cow)
+                self.stats.page_copy_calls += 1
             if self._steps.reset_state is not None:
                 self._arena = self._steps.reset_state(self._arena, s)
             active[s] = req
@@ -395,14 +514,19 @@ class ServeEngine:
             if adm.cached_pages:
                 if adm.dedup:
                     self.stats.dedup_hits += 1
+                    admissions["dedup"] += 1
                 else:
                     self.stats.cache_hits += 1
+                    admissions["hit"] += 1
                 self.stats.cache_hit_tokens += start
             else:
+                admissions["miss"] += 1
                 sched.note_prefill(req, s)
                 if cache is not None:
                     sched.miss_open(s)
             self.stats.prompt_tokens += L
+            trc.instant("req/admitted", uid=req.uid, slot=s,
+                        cached_tokens=start, dedup=adm.dedup)
             return True
 
         def admit() -> None:
@@ -429,8 +553,10 @@ class ServeEngine:
                 free_slots.pop(0)
 
         while any(a is not None for a in active) or sched.pending:
-            sched.start_round()
-            admit()
+            r_t0 = time.perf_counter()
+            with phase("round/admit"):
+                sched.start_round()
+                admit()
             if not any(a is not None for a in active):
                 if sched.pending:
                     raise PoolExhausted(
@@ -443,135 +569,193 @@ class ServeEngine:
             # pages, then the youngest younger slot — or self, if none is
             # younger (oldest-first order makes progress certain)
             plan = {}                       # slot -> chunk tokens
-            order = sorted((s for s in range(self.slots)
-                            if active[s] is not None),
-                           key=lambda s: sched.admitted_at[s])
-            for s in order:
-                while active[s] is not None:
-                    if prefilling(s):
-                        n = plan.get(s)
-                        if n is None:
-                            n = sched.grant_chunk(
-                                len(active[s].prompt) - int(pos[s]))
-                            if n == 0:
-                                break       # budget spent: idle a round
-                            plan[s] = n
-                        need = int(pos[s]) + n
-                    else:
-                        need = int(pos[s]) + 1
-                    if self._alloc(s, need) is not None:
-                        break
-                    victim = sched.choose_victim(s)
-                    if victim is not None:
-                        plan.pop(victim, None)
-                        preempt(victim)
-                        continue
-                    if not any(active[t] is not None
-                               for t in range(self.slots) if t != s):
-                        raise PoolExhausted(
-                            f"sequence in slot {s} needs "
-                            f"{need} tokens of KV but the pool "
-                            f"holds {self.n_pages} pages total")
-                    plan.pop(s, None)
-                    preempt(s)      # yield to older slots; retry later
+            with phase("round/grant"):
+                order = sorted((s for s in range(self.slots)
+                                if active[s] is not None),
+                               key=lambda s: sched.admitted_at[s])
+                for s in order:
+                    while active[s] is not None:
+                        if prefilling(s):
+                            n = plan.get(s)
+                            if n is None:
+                                n = sched.grant_chunk(
+                                    len(active[s].prompt) - int(pos[s]))
+                                if n == 0:
+                                    break   # budget spent: idle a round
+                                plan[s] = n
+                            need = int(pos[s]) + n
+                        else:
+                            need = int(pos[s]) + 1
+                        if self._alloc(s, need) is not None:
+                            break
+                        victim = sched.choose_victim(s)
+                        if victim is not None:
+                            plan.pop(victim, None)
+                            preempt(victim)
+                            continue
+                        if not any(active[t] is not None
+                                   for t in range(self.slots) if t != s):
+                            raise PoolExhausted(
+                                f"sequence in slot {s} needs "
+                                f"{need} tokens of KV but the pool "
+                                f"holds {self.n_pages} pages total")
+                        plan.pop(s, None)
+                        preempt(s)  # yield to older slots; retry later
 
-            decode_lanes = [s for s in order if active[s] is not None
-                            and not prefilling(s)]
-            run_decode = bool(decode_lanes) and (self._co_schedule
-                                                 or not plan)
+                decode_lanes = [s for s in order if active[s] is not None
+                                and not prefilling(s)]
+                run_decode = bool(decode_lanes) and (self._co_schedule
+                                                     or not plan)
             if not plan and not run_decode:
                 continue            # everything preempted/idled; re-admit
 
-            max_n = max(plan.values(), default=0)
-            c_len = self.chunk if max_n > 1 else 1
-            toks = np.zeros((self.slots, c_len), np.int32)
-            start = np.zeros(self.slots, np.int32)
-            n_new = np.zeros(self.slots, np.int32)
-            for s in range(self.slots):
-                if active[s] is None:
-                    continue
-                start[s] = pos[s]
-                if s in plan:
-                    n = plan[s]
-                    n_new[s] = n
-                    p0 = int(pos[s])
-                    toks[s, :n] = active[s].prompt[p0:p0 + n]
-                elif not prefilling(s) and run_decode:
-                    n_new[s] = 1
-                    toks[s, 0] = next_tok[s]
+            with phase("round/host_prep"):
+                max_n = max(plan.values(), default=0)
+                c_len = self.chunk if max_n > 1 else 1
+                toks = np.zeros((self.slots, c_len), np.int32)
+                start = np.zeros(self.slots, np.int32)
+                n_new = np.zeros(self.slots, np.int32)
+                for s in range(self.slots):
+                    if active[s] is None:
+                        continue
+                    start[s] = pos[s]
+                    if s in plan:
+                        n = plan[s]
+                        n_new[s] = n
+                        p0 = int(pos[s])
+                        toks[s, :n] = active[s].prompt[p0:p0 + n]
+                    elif not prefilling(s) and run_decode:
+                        n_new[s] = 1
+                        toks[s, 0] = next_tok[s]
 
-            ts = time.monotonic()
-            # gather-work accounting: decode lanes attend seq = pos+1 (the
-            # token being written included); chunk lanes stream per q
-            # block, page-for-page what kv_traffic_chunked charges
-            act_dec = decode_lanes if run_decode else []
-            self.stats.kv_pages_live += sum(
-                pages_for(int(pos[s]) + 1, self.page) for s in act_dec)
-            self.stats.kv_pages_full += len(act_dec) * self.max_pages_per_seq
-            for s in plan:
-                self.stats.prefill_kv_pages_live += chunk_pages_streamed(
-                    int(pos[s]), plan[s], page=self.page)
-                self.stats.prefill_kv_pages_written += (
-                    pages_for(int(pos[s]) + plan[s], self.page)
-                    - int(pos[s]) // self.page)
-            cache_in = pool.install_tables(self._arena)
-            logits, self._arena = self._steps.step(
-                self.params, jnp.asarray(toks), cache_in,
-                jnp.asarray(start), jnp.asarray(n_new))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))    # [B, C]
+                ts = time.monotonic()
+                # gather-work accounting: decode lanes attend seq = pos+1
+                # (the token being written included); chunk lanes stream
+                # per q block, page-for-page what kv_traffic_chunked
+                # charges
+                act_dec = decode_lanes if run_decode else []
+                self.stats.kv_pages_live += sum(
+                    pages_for(int(pos[s]) + 1, self.page)
+                    for s in act_dec)
+                self.stats.kv_pages_full += (len(act_dec)
+                                             * self.max_pages_per_seq)
+                for s in plan:
+                    self.stats.prefill_kv_pages_live += \
+                        chunk_pages_streamed(int(pos[s]), plan[s],
+                                             page=self.page)
+                    self.stats.prefill_kv_pages_written += (
+                        pages_for(int(pos[s]) + plan[s], self.page)
+                        - int(pos[s]) // self.page)
+                cache_in = pool.install_tables(self._arena)
+            with phase("round/device_step"):
+                logits, self._arena = self._steps.step(
+                    self.params, jnp.asarray(toks), cache_in,
+                    jnp.asarray(start), jnp.asarray(n_new))
+                nxt_dev = jnp.argmax(logits, axis=-1)       # [B, C]
+                jax.block_until_ready(nxt_dev)
+                nxt = np.asarray(nxt_dev)
             if act_dec:
                 self.stats.decode_steps += 1
 
             emitted = 0
-            for s in order:
-                req = active[s]
-                if req is None:
-                    continue
-                if s in plan:
-                    n = plan[s]
-                    pos[s] += n
-                    sched.note_progress(s, int(pos[s]))
-                    self.stats.prefill_chunks += 1
-                    self.stats.prefill_tokens += n
-                    self.stats.prefill_tokens_padded += c_len
-                    if int(pos[s]) < len(req.prompt):
-                        continue            # mid-prompt: more chunks due
-                    # last chunk: the logit at the prompt's final token is
-                    # the request's first generated token
-                    self.stats.prefills += 1
-                    publish(req, s)
-                    sched.miss_closed(s)
-                    tok = int(nxt[s, n - 1])
-                    req.out_tokens.append(tok)
-                    self.stats.tokens_out += 1
-                    emitted += 1
-                    if _finished(req, len(req.prompt), self.max_len):
-                        req.done = True     # e.g. EOS at prefill: never
-                        active[s] = None    # enters a decode round
-                        pool.free_slot(s)
-                        sched.on_finish(s)
-                        emit(-1, tok, req)
-                    else:
+            with phase("round/emit"):
+                for s in order:
+                    req = active[s]
+                    if req is None:
+                        continue
+                    if s in plan:
+                        n = plan[s]
+                        pos[s] += n
+                        sched.note_progress(s, int(pos[s]))
+                        self.stats.prefill_chunks += 1
+                        self.stats.prefill_tokens += n
+                        self.stats.prefill_tokens_padded += c_len
+                        trc.instant("req/chunk_done", uid=req.uid,
+                                    slot=s, pos=int(pos[s]))
+                        if int(pos[s]) < len(req.prompt):
+                            continue        # mid-prompt: more chunks due
+                        # last chunk: the logit at the prompt's final
+                        # token is the request's first generated token
+                        self.stats.prefills += 1
+                        publish(req, s)
+                        sched.miss_closed(s)
+                        tok = int(nxt[s, n - 1])
+                        req.out_tokens.append(tok)
+                        self.stats.tokens_out += 1
+                        emitted += 1
+                        if _finished(req, len(req.prompt), self.max_len):
+                            req.done = True  # e.g. EOS at prefill: never
+                            active[s] = None  # enters a decode round
+                            pool.free_slot(s)
+                            sched.on_finish(s)
+                            emit(-1, tok, req)
+                            trc.instant("req/finished", uid=req.uid,
+                                        slot=-1,
+                                        tokens=len(req.out_tokens))
+                        else:
+                            next_tok[s] = tok
+                            emit(s, tok, req)
+                    elif s in act_dec:
+                        pos[s] += 1
+                        tok = int(nxt[s, 0])
                         next_tok[s] = tok
+                        req.out_tokens.append(tok)
+                        self.stats.tokens_out += 1
+                        emitted += 1
                         emit(s, tok, req)
-                elif s in act_dec:
-                    pos[s] += 1
-                    tok = int(nxt[s, 0])
-                    next_tok[s] = tok
-                    req.out_tokens.append(tok)
-                    self.stats.tokens_out += 1
-                    emitted += 1
-                    emit(s, tok, req)
-                    if _finished(req, int(pos[s]), self.max_len):
-                        finish(s)
-            self.stats.step_seconds.append(time.monotonic() - ts)
-            self.stats.step_tokens.append(emitted)
+                        if _finished(req, int(pos[s]), self.max_len):
+                            finish(s)
+                self.stats.step_seconds.append(time.monotonic() - ts)
+                self.stats.step_tokens.append(emitted)
+            self.stats.rounds += 1
+            trc.complete("round", r_t0, time.perf_counter() - r_t0,
+                         lanes=len(order), prefill_lanes=len(plan),
+                         decode_lanes=len(act_dec), emitted=emitted)
 
         self.stats.preemptions = sched.preemptions
         self.stats.pages_peak = max(self.stats.pages_peak, pool.pages_peak)
         self.stats.cow_copies = pool.cow_copies - cow0
+        self.stats.adopt_calls = pool.adopt_calls - adopt0
+        self.stats.device_tables_rebuilds = pool.tables_rebuilds - tbl0
+        _, jitc1, jits1 = self._steps.jit_counters()
+        self.stats.jit_compiles = jitc1 - jitc0
+        self.stats.jit_compile_s = jits1 - jits0
         self.stats.wall_s = time.monotonic() - t0
+        self._flush_metrics(reg, admissions)
         return requests
+
+    def _flush_metrics(self, reg: obs_metrics.Registry,
+                       admissions: Dict[str, int]) -> None:
+        """Fold the finished run's EngineStats deltas into the registry
+        (names per the ``obs/metrics.py`` contract)."""
+        s = self.stats
+        reg.counter("serve_rounds_total",
+                    "engine rounds that ran a jit step").inc(s.rounds)
+        tok = reg.counter("serve_tokens_total", "tokens emitted/discarded",
+                          labels=("kind",))
+        tok.inc(s.tokens_out, kind="emitted")
+        tok.inc(s.tokens_discarded, kind="discarded")
+        adm = reg.counter("serve_admissions_total",
+                          "request admissions by prefix-cache outcome",
+                          labels=("kind",))
+        for kind, n in admissions.items():
+            adm.inc(n, kind=kind)
+        reg.counter("serve_preemptions_total",
+                    "recompute-style slot evictions").inc(s.preemptions)
+        ops = reg.counter("serve_page_ops_total",
+                          "host<->device page-op round trips",
+                          labels=("op",))
+        ops.inc(s.adopt_calls, op="adopt")
+        ops.inc(s.page_copy_calls, op="page_copy")
+        ops.inc(s.device_tables_rebuilds, op="tables_rebuild")
+        ops.inc(s.cow_copies, op="cow")
+        ops.inc(s.cache_evictions, op="cache_evict")
+        pool = self._pool
+        if pool is not None:
+            reg.gauge("serve_pages_used",
+                      "arena pages allocated").set(pool.used_count)
+            reg.gauge("serve_pages_peak",
+                      "peak arena pages this run").set(s.pages_peak)
 
 
 # ==========================================================================

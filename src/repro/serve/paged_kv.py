@@ -88,6 +88,14 @@ class PagedKVPool:
                                      np.int32)
         self.pages_peak = 0
         self.cow_copies = 0
+        # host↔device page-op round-trip counters (cumulative over the
+        # pool's life; the engine diffs them per run into EngineStats —
+        # these quantify the prefix-cache adopt/COW host overhead):
+        # adopt_calls counts page-adoption events (block-table rewrites
+        # for cached/dedup'd pages), tables_rebuilds counts device_tables
+        # host→device uploads the content cache could not elide
+        self.adopt_calls = 0
+        self.tables_rebuilds = 0
         self._tbl_cache = None       # (key, device array) — see below
 
     # ---- allocation ----------------------------------------------------
@@ -178,6 +186,7 @@ class PagedKVPool:
         if self.slot_pages[slot]:
             raise PageAccountingError(
                 f"adopt into non-empty slot {slot}")
+        self.adopt_calls += 1
         for j, pid in enumerate(page_ids):
             if pid == 0:
                 raise PageAccountingError(
@@ -233,6 +242,7 @@ class PagedKVPool:
         key = (n_groups, self.block_tables.tobytes())
         if self._tbl_cache is not None and self._tbl_cache[0] == key:
             return self._tbl_cache[1]
+        self.tables_rebuilds += 1
         tbl = jnp.asarray(self.block_tables)
         dev = jnp.broadcast_to(tbl[None], (n_groups,) + tbl.shape)
         if jax.default_backend() == "cpu":

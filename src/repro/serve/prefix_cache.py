@@ -52,6 +52,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.serve.paged_kv import PagedKVPool
 
 
@@ -90,10 +91,16 @@ class PrefixCacheStats:
 class PrefixCache:
     """Radix index of cached full KV pages over a :class:`PagedKVPool`.
 
-    Host-side only; see the module docstring for lifetime rules."""
+    Host-side only; see the module docstring for lifetime rules.
 
-    def __init__(self, pool: PagedKVPool):
+    ``tracer`` (else the process default, ``obs.trace``) receives
+    ``cache/published`` and ``cache/evicted`` instants — each marks a
+    host-side index mutation whose pages a slot must later adopt or
+    re-prefill, i.e. a page-op round trip in the making."""
+
+    def __init__(self, pool: PagedKVPool, tracer=None):
         self.pool = pool
+        self._tracer = tracer
         self.page = pool.page
         self.root = _Node(None, 0, None, 0)
         self._clock = 0
@@ -180,6 +187,9 @@ class PrefixCache:
         self.stats.published_pages += new
         if new:
             self.version += 1
+            obs_trace.active(self._tracer).instant(
+                "cache/published", pages=new,
+                cached_total=len(self._nodes))
         return new
 
     # ---- eviction ------------------------------------------------------
@@ -204,6 +214,10 @@ class PrefixCache:
                 self._remove(node)
                 freed += 1
         self.stats.evicted_pages += freed
+        if freed:
+            obs_trace.active(self._tracer).instant(
+                "cache/evicted", pages=freed,
+                cached_total=len(self._nodes))
         return freed
 
     def _remove(self, node: _Node) -> None:

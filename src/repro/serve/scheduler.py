@@ -33,6 +33,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.serve.paged_kv import pages_for
 
 
@@ -100,12 +101,21 @@ class FifoScheduler:
     are only partially written, so the head *waits* (admission returns
     None) until the leader's prefill completes — ``note_progress`` is the
     engine's per-chunk progress feed. Entries drop when the leader
-    finishes or is preempted; the radix index takes over afterwards."""
+    finishes or is preempted; the radix index takes over afterwards.
 
-    def __init__(self, cfg: SchedulerConfig, prefix_cache=None, pool=None):
+    ``tracer`` (else the process default, ``obs.trace``) receives
+    ``sched/admit`` / ``sched/preempt`` instants and the two admission
+    stall events — ``sched/dedup_wait`` (head waiting for an in-flight
+    identical prompt) and ``sched/miss_wait`` (head serialized behind
+    the one open prefix-cache miss) — so queueing decisions are visible
+    on the trace timeline, not just in aggregate counters."""
+
+    def __init__(self, cfg: SchedulerConfig, prefix_cache=None, pool=None,
+                 tracer=None):
         self.cfg = cfg
         self.prefix_cache = prefix_cache
         self.pool = pool              # enables in-flight dedup
+        self._tracer = tracer
         self.queue: Deque = deque()
         self._admit_seq = 0           # monotonically increasing admit stamp
         self.admitted_at: dict = {}   # slot -> admit stamp
@@ -184,6 +194,8 @@ class FifoScheduler:
                 self._match_memo = (key, (adm.cached_pages,
                                           adm.cached_len))
         if self._match_pending(adm):
+            obs_trace.active(self._tracer).instant(
+                "sched/dedup_wait", uid=getattr(req, "uid", None))
             return None               # wait for the in-flight leader
         if (self.prefix_cache is not None and not adm.cached_pages
                 and self._open_miss):
@@ -194,6 +206,8 @@ class FifoScheduler:
             # leader finishes instead of re-prefilling the same pages in
             # parallel. Hits admit freely; pre-chunking prefill was
             # fully serial anyway, so this never loses to the old path.
+            obs_trace.active(self._tracer).instant(
+                "sched/miss_wait", uid=getattr(req, "uid", None))
             return None
         L = len(req.prompt)
         start = adm.suffix_start
@@ -279,6 +293,8 @@ class FifoScheduler:
 
     def on_admit(self, slot: int) -> None:
         self.admitted_at[slot] = self._admit_seq
+        obs_trace.active(self._tracer).instant(
+            "sched/admit", slot=slot, stamp=self._admit_seq)
         self._admit_seq += 1
 
     def on_finish(self, slot: int) -> None:
@@ -310,6 +326,7 @@ class FifoScheduler:
 
     def on_preempt(self, slot: int) -> None:
         self.preemptions += 1
+        obs_trace.active(self._tracer).instant("sched/preempt", slot=slot)
         self.admitted_at.pop(slot, None)
         self._drop_pending(slot)
         self.miss_closed(slot)

@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -69,6 +70,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import runtime_context as ctx
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.launch import mesh as meshlib
 from repro.launch import sharding as shd
 from repro.models import kvcache as KV
@@ -165,6 +168,77 @@ def contiguous_decode(cfg: ModelConfig) -> Callable:
 
 
 # ==========================================================================
+# jit observability: compile / retrace counters around every serving jit
+# ==========================================================================
+class TracedJit:
+    """Callable wrapper over a serving jit that detects (re)compiles.
+
+    Every call snapshots the underlying jit's executable-cache size
+    (``_cache_size``); growth across a call means that call traced a new
+    shape — the call's wall time is attributed to compile, a
+    ``jit/compile`` instant fires on the process tracer, and
+    ``serve_jit_compiles_total{fn}`` increments on the process registry.
+
+    ``expected_shapes`` declares this wrapper's compile surface — the
+    number of distinct shapes ONE engine should ever drive through it
+    (the unified step compiles C ∈ {1, chunk}, so 2). Compiles beyond it
+    raise ``serve_jit_retraces_unexpected_total{fn}`` and a
+    ``jit/unexpected_retrace`` instant: the late-flag-flip / geometry-
+    drift bug class becomes a visible metric instead of a silent 10x
+    round stall. Counters are per wrapper (one per
+    :func:`build_paged_steps` call), so engines sharing an lru-cached
+    warm jit correctly count zero compiles of their own.
+    """
+
+    def __init__(self, name: str, fn: Callable,
+                 expected_shapes: Optional[int] = None):
+        self.name = name
+        self._fn = fn
+        self.expected_shapes = expected_shapes
+        self.calls = 0
+        self.compiles = 0
+        self.compile_seconds = 0.0
+
+    def _cache_size(self) -> Optional[int]:
+        try:
+            return self._fn._cache_size()
+        except Exception:
+            return None        # non-jit callable or a jax without the API
+
+    def __call__(self, *args, **kw):
+        before = self._cache_size()
+        t0 = time.perf_counter()
+        out = self._fn(*args, **kw)
+        dt = time.perf_counter() - t0
+        self.calls += 1
+        after = self._cache_size()
+        if before is not None and after is not None and after > before:
+            grew = after - before
+            self.compiles += grew
+            self.compile_seconds += dt
+            trc = obs_trace.get_tracer()
+            trc.instant("jit/compile", fn=self.name, cache_size=after,
+                        seconds=dt)
+            reg = obs_metrics.get_registry()
+            reg.counter(
+                "serve_jit_compiles_total",
+                "serving-jit executable-cache growth events",
+                labels=("fn",)).inc(grew, fn=self.name)
+            if self.expected_shapes is not None \
+                    and self.compiles > self.expected_shapes:
+                over = min(grew,
+                           self.compiles - self.expected_shapes)
+                trc.instant("jit/unexpected_retrace", fn=self.name,
+                            compiles=self.compiles,
+                            expected=self.expected_shapes)
+                reg.counter(
+                    "serve_jit_retraces_unexpected_total",
+                    "compiles beyond a step's declared compile surface",
+                    labels=("fn",)).inc(over, fn=self.name)
+        return out
+
+
+# ==========================================================================
 # paged serving step set (ServeEngine + launch/serve.py)
 # ==========================================================================
 @dataclasses.dataclass(frozen=True)
@@ -200,6 +274,19 @@ class PagedServeSteps:
                 and self.cache_dtype == cache_dtype
                 and self.chunk == chunk
                 and self.paged_attention == paged_attention)
+
+    def jit_counters(self) -> Tuple[int, int, float]:
+        """Aggregate (calls, compiles, compile_seconds) over this step
+        set's :class:`TracedJit` members — the engine diffs these around
+        a run to attribute compile time in ``EngineStats``."""
+        calls = compiles = 0
+        seconds = 0.0
+        for fn in (self.step, self.page_copy, self.reset_state):
+            if isinstance(fn, TracedJit):
+                calls += fn.calls
+                compiles += fn.compiles
+                seconds += fn.compile_seconds
+        return calls, compiles, seconds
 
 
 def default_chunk(max_pages_per_seq: int, page: int) -> int:
@@ -275,6 +362,10 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     """
     if chunk is None:
         chunk = default_chunk(max_pages_per_seq, page)
+    # one engine drives exactly two step widths (C = 1 and C = chunk; one
+    # when they coincide) and a single shape through page_copy/reset —
+    # that is each wrapper's declared compile surface
+    step_shapes = 2 if chunk > 1 else 1
     if mesh is None:
         step, page_copy, reset = _single_device_steps(
             cfg, page, n_pages, max_slots, max_pages_per_seq,
@@ -284,7 +375,10 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
             max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
             cache_dtype=cache_dtype, chunk=chunk,
             paged_attention=paged_attention,
-            step=step, page_copy=page_copy, reset_state=reset)
+            step=TracedJit("step", step, step_shapes),
+            page_copy=TracedJit("page_copy", page_copy, 1),
+            reset_state=(None if reset is None
+                         else TracedJit("reset_state", reset, 1)))
 
     if params_struct is None:
         raise ValueError("sharded step builders need params_struct to "
@@ -309,21 +403,27 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
 
     reset = None
     if any(k == "mamba" or k.startswith("hybrid") for k in cfg.pattern):
-        reset = jax.jit(_reset_state_body(cfg),
-                        in_shardings=(a_sh, rep), out_shardings=a_sh,
-                        **_donate((0,)))
+        reset = TracedJit(
+            "reset_state",
+            jax.jit(_reset_state_body(cfg),
+                    in_shardings=(a_sh, rep), out_shardings=a_sh,
+                    **_donate((0,))), 1)
     return PagedServeSteps(
         cfg=cfg, mesh=mesh, page=page, n_pages=n_pages,
         max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
         cache_dtype=cache_dtype, chunk=chunk,
         paged_attention=paged_attention,
-        step=jax.jit(step_fn,
-                     in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh),
-                     out_shardings=(l_sh, a_sh),
-                     **_donate((2,))),
-        page_copy=jax.jit(_page_copy_body(cfg),
-                          in_shardings=(a_sh, rep, rep),
-                          out_shardings=a_sh, **_donate((0,))),
+        step=TracedJit(
+            "step",
+            jax.jit(step_fn,
+                    in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh),
+                    out_shardings=(l_sh, a_sh),
+                    **_donate((2,))), step_shapes),
+        page_copy=TracedJit(
+            "page_copy",
+            jax.jit(_page_copy_body(cfg),
+                    in_shardings=(a_sh, rep, rep),
+                    out_shardings=a_sh, **_donate((0,))), 1),
         reset_state=reset)
 
 
