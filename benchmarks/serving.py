@@ -17,9 +17,17 @@ model) mesh — token parity with the single-device engine plus the
 per-shard Eq. (3)/(4) traffic split. The phase-breakdown section splits
 each configuration's wall clock into host / device / compile shares from
 the engine's phase accounting (``repro.obs``) for fp32-vs-qmc decode and
-cached-vs-uncached prefill.
+cached-vs-uncached prefill. The cost-attribution section re-runs the
+fp32-vs-qmc decode pair under ``obs.costs`` capture: per step width it
+reports measured wall seconds against the XLA-cost roofline bound
+(drift, arithmetic intensity) plus the Eq. (3)/(4) *modeled* bytes /
+energy / latency per token — the measured-vs-modeled bridge open
+roadmap item 1 is judged against.
 
   PYTHONPATH=src python -m benchmarks.serving
+
+``BENCH_SERVING_OUT=path`` redirects the JSON; ``BENCH_SECTIONS=a,b``
+runs only the named sections (CI's drift check runs a fast subset).
 """
 from __future__ import annotations
 
@@ -38,9 +46,21 @@ from repro.memsys.workload import (kv_traffic_chunked, kv_traffic_paged,
                                    shard_serve_traffic)
 from repro.models.config import ModelConfig
 from repro.models.model import init_params
+from repro.obs import costs as obs_costs
 from repro.serve.engine import LegacyServeEngine, Request, ServeEngine
 
-OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json")
+OUT = os.environ.get(
+    "BENCH_SERVING_OUT",
+    os.path.join(os.path.dirname(__file__), "..", "BENCH_serving.json"))
+
+
+def _enabled(section: str) -> bool:
+    """BENCH_SECTIONS=a,b limits the run to the named sections (default:
+    all) — CI's warn-only drift step runs a fast subset this way."""
+    sel = os.environ.get("BENCH_SECTIONS")
+    if not sel:
+        return True
+    return section in {s.strip() for s in sel.split(",") if s.strip()}
 
 CFG_KW = dict(name="serve-bench", family="dense", n_layers=2,
               d_model=128, n_heads=8, n_kv_heads=2, d_ff=256, vocab=256)
@@ -107,37 +127,49 @@ def run() -> dict:
     params = init_params(CFG, jax.random.PRNGKey(0))
     results = {"config": {"model": CFG.name, "n_requests": N_REQ,
                           "max_new_tokens": MAX_NEW, "max_len": MAX_LEN,
-                          "page": PAGE},
-               "slots": {}}
-    for slots in (1, 4, 8):
-        legacy = _measure(LegacyServeEngine, params, slots)
-        paged = _measure(ServeEngine, params, slots, page_size=PAGE)
-        speedup = paged["tokens_per_s"] / max(legacy["tokens_per_s"], 1e-9)
-        results["slots"][str(slots)] = {"legacy": legacy, "paged": paged,
-                                        "speedup": speedup}
-        print(f"serving/legacy_s{slots},"
-              f"{legacy['p50_token_latency_us']:.0f},"
-              f"{legacy['tokens_per_s']:.1f}tok/s")
-        print(f"serving/paged_s{slots},"
-              f"{paged['p50_token_latency_us']:.0f},"
-              f"{paged['tokens_per_s']:.1f}tok/s "
-              f"speedup={speedup:.2f}x")
-    # batch-dependent KV stream at the moment every request is full-length
-    lens = [len(r.prompt) + MAX_NEW for r in _requests()]
-    t = kv_traffic_paged(CFG, lens, page=PAGE)
-    results["paged_kv_traffic"] = {
-        "n_pages": t.n_pages,
-        "kv_bits_per_step": t.kv_bits_per_step,
-        "frag_bits_per_step": t.frag_bits_per_step,
-        "utilization": t.utilization}
-    results["prefix_cache"] = {
-        "sys_prompt_len": SYS_PROMPT_LEN,
-        "slots": {str(s): _measure_prefix(params, s) for s in (4, 8)}}
-    results["weights"] = _measure_weights(params)
-    results["paged_attention"] = _measure_paged_attention(params)
-    results["chunked_prefill"] = _measure_chunked(params)
-    results["phase_breakdown"] = _measure_phases(params)
-    results["sharded"] = _measure_sharded()
+                          "page": PAGE}}
+    if _enabled("slots"):
+        results["slots"] = {}
+        for slots in (1, 4, 8):
+            legacy = _measure(LegacyServeEngine, params, slots)
+            paged = _measure(ServeEngine, params, slots, page_size=PAGE)
+            speedup = paged["tokens_per_s"] / max(legacy["tokens_per_s"],
+                                                  1e-9)
+            results["slots"][str(slots)] = {"legacy": legacy,
+                                            "paged": paged,
+                                            "speedup": speedup}
+            print(f"serving/legacy_s{slots},"
+                  f"{legacy['p50_token_latency_us']:.0f},"
+                  f"{legacy['tokens_per_s']:.1f}tok/s")
+            print(f"serving/paged_s{slots},"
+                  f"{paged['p50_token_latency_us']:.0f},"
+                  f"{paged['tokens_per_s']:.1f}tok/s "
+                  f"speedup={speedup:.2f}x")
+    if _enabled("paged_kv_traffic"):
+        # batch-dependent KV stream once every request is full-length
+        lens = [len(r.prompt) + MAX_NEW for r in _requests()]
+        t = kv_traffic_paged(CFG, lens, page=PAGE)
+        results["paged_kv_traffic"] = {
+            "n_pages": t.n_pages,
+            "kv_bits_per_step": t.kv_bits_per_step,
+            "frag_bits_per_step": t.frag_bits_per_step,
+            "utilization": t.utilization}
+    if _enabled("prefix_cache"):
+        results["prefix_cache"] = {
+            "sys_prompt_len": SYS_PROMPT_LEN,
+            "slots": {str(s): _measure_prefix(params, s) for s in (4, 8)}}
+    if _enabled("weights"):
+        results["weights"] = _measure_weights(params)
+    if _enabled("paged_attention"):
+        results["paged_attention"] = _measure_paged_attention(params)
+    if _enabled("chunked_prefill"):
+        results["chunked_prefill"] = _measure_chunked(params)
+    if _enabled("phase_breakdown"):
+        results["phase_breakdown"] = _measure_phases(params)
+    if _enabled("cost_attribution"):
+        results["cost_attribution"] = _measure_costs(params)
+    if _enabled("sharded"):
+        results["sharded"] = _measure_sharded()
     with open(OUT, "w") as f:
         json.dump(results, f, indent=2)
     print(f"serving/json,0,{os.path.abspath(OUT)}")
@@ -406,6 +438,45 @@ def _measure_phases(params) -> dict:
           f"cached_host={p['cached']['host_share']:.0%} "
           f"adopts={p['cached']['adopt_calls']} "
           f"tbl_rebuilds={p['cached']['device_tables_rebuilds']}")
+    return out
+
+
+def _measure_costs(params) -> dict:
+    """fp32-vs-qmc decode under ``obs.costs`` capture at the same slot
+    count: per step width, measured wall seconds against the XLA-cost
+    roofline bound (drift / roofline fraction / arithmetic intensity)
+    plus the Eq. (3)/(4) modeled bytes/energy/latency per token from the
+    run's own engine counters — measured and modeled side by side.
+
+    Fresh engines per label: capture keys on call shapes each TracedJit
+    wrapper has seen, so it fires even over the lru-warm jit cache; the
+    warm-up engine absorbs the compiles so the measured engine's
+    per-shape wall tables are steady state."""
+    qparams = quantize_for_serving(
+        params, QMCConfig(rho=0.3, granularity="subtile"), tp_shards=1,
+        min_dim=64)
+    prev = obs_costs.enable_capture()
+    try:
+        out = {}
+        for label, p in (("fp32", params), ("qmc", qparams)):
+            ServeEngine(CFG, p, slots=4, max_len=MAX_LEN,
+                        page_size=PAGE).run(_requests())
+            eng = ServeEngine(CFG, p, slots=4, max_len=MAX_LEN,
+                              page_size=PAGE)
+            eng.run(_requests())
+            out[label] = eng.last_cost_report.to_dict()
+    finally:
+        obs_costs.enable_capture(prev)
+    ratio = (out["qmc"]["modeled"]["bytes_per_token"]
+             / max(out["fp32"]["modeled"]["bytes_per_token"], 1e-9))
+    out["qmc_vs_fp32_modeled_bytes_per_token"] = ratio
+    step_rows = [r for r in out["qmc"]["fns"] if r["fn"] == "step"]
+    frac = max((r["roofline_fraction"] for r in step_rows), default=0.0)
+    print(f"serving/cost_attr_s4,0,"
+          f"qmc_vs_fp32_modeled_bytes={ratio:.3f}x "
+          f"qmc_step_roofline_frac={frac:.2e} "
+          f"qmc_modeled="
+          f"{out['qmc']['modeled']['bytes_per_token'] / 1e3:.1f}KB/tok")
     return out
 
 

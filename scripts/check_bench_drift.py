@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Diff key BENCH_serving.json ratios against the committed baseline.
+
+The serving bench writes absolute tokens/s (machine-dependent) but its
+RATIOS — paged-vs-legacy speedup, prefix-cache prefill speedup, qmc-vs-
+fp32 throughput, qmc-vs-fp32 modeled bytes/token — are the trajectory
+the roadmap's open items are judged by. This script compares a freshly
+produced bench JSON against the committed baseline snapshot
+(``benchmarks/baselines/serving.json`` — the generated
+``BENCH_serving.json`` itself is gitignored) and prints a WARN line
+per ratio that moved more than ``--tolerance`` (relative). Warn-only by
+default (exit 0) so noisy CI runners never block a merge; ``--strict``
+exits 1 on any warning for local gatekeeping.
+
+  python scripts/check_bench_drift.py --current /tmp/bench_current.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# dotted paths into the bench JSON -> short display name. A path missing
+# on either side (e.g. a BENCH_SECTIONS subset run) is skipped, not an
+# error — the check covers whatever both files report.
+KEY_RATIOS = {
+    "slots.4.speedup": "paged_vs_legacy_speedup_s4",
+    "slots.8.speedup": "paged_vs_legacy_speedup_s8",
+    "prefix_cache.slots.8.prefill_speedup": "prefix_prefill_speedup_s8",
+    "weights.qmc_vs_fp32_tokens_per_s": "qmc_vs_fp32_tokens_per_s",
+    "cost_attribution.qmc_vs_fp32_modeled_bytes_per_token":
+        "qmc_vs_fp32_modeled_bytes_per_token",
+}
+
+
+def lookup(doc: dict, path: str):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def compare(current: dict, baseline: dict, tolerance: float):
+    """Yields (name, base, cur, rel_change, warn) per comparable ratio."""
+    for path, name in KEY_RATIOS.items():
+        base = lookup(baseline, path)
+        cur = lookup(current, path)
+        if base is None or cur is None:
+            continue
+        rel = (cur - base) / base if base else float("inf")
+        yield name, base, cur, rel, abs(rel) > tolerance
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True,
+                    help="freshly produced bench JSON")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/serving.json",
+                    help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="relative change that triggers a WARN "
+                         "(default 0.25 = 25%%)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any ratio warned")
+    args = ap.parse_args()
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    warned = compared = 0
+    for name, base, cur, rel, warn in compare(current, baseline,
+                                              args.tolerance):
+        compared += 1
+        tag = "WARN" if warn else "ok  "
+        if warn:
+            warned += 1
+        print(f"{tag} {name}: baseline={base:.4f} current={cur:.4f} "
+              f"({rel:+.1%})")
+    if compared == 0:
+        print("WARN no comparable ratios between the two files "
+              "(section mismatch?)")
+        warned += 1
+    print(f"bench-drift: {warned}/{max(compared, 1)} ratios moved more "
+          f"than {args.tolerance:.0%}")
+    return 1 if args.strict and warned else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,7 @@ from repro.core.qconfig import QMCConfig  # noqa: E402
 from repro.core.serving_quant import serving_params_struct  # noqa: E402
 from repro.launch import mesh as meshlib  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import xla_compat  # noqa: E402
 from repro.launch import sharding as shd  # noqa: E402
 from repro.models.model import init_params  # noqa: E402
 from repro.optim import adamw  # noqa: E402
@@ -122,13 +123,10 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def cost_dict(compiled) -> Dict:
-    """compiled.cost_analysis() across jax versions: newer returns a flat
-
-    dict, older a one-element list of dicts."""
-    ca = compiled.cost_analysis() or {}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0] if ca else {}
-    return dict(ca)
+    """compiled.cost_analysis() across jax versions — the shared shim in
+    ``launch/xla_compat.py`` (also used by the live serving cost layer,
+    ``obs/costs.py``)."""
+    return xla_compat.cost_analysis_dict(compiled)
 
 
 def _cost_and_coll(compiled) -> Dict:

@@ -32,6 +32,7 @@ from repro.core.qconfig import QMCConfig
 from repro.core.serving_quant import quantize_for_serving
 from repro.launch import mesh as meshlib
 from repro.models.model import init_params
+from repro.obs import costs as obs_costs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.serve import steps as serve_steps
@@ -86,7 +87,16 @@ def main():
     ap.add_argument("--profile", metavar="DIR",
                     help="wrap the run in jax.profiler.trace(DIR) "
                          "(TensorBoard-loadable XLA profile)")
+    ap.add_argument("--cost-report", action="store_true",
+                    help="capture XLA cost_analysis() per step shape and "
+                         "print the per-step roofline attribution table "
+                         "+ modeled memory-system cost after the run "
+                         "(obs/costs.py; makes step calls synchronous)")
     args = ap.parse_args()
+
+    if args.cost_report:
+        # before any step set is built, so every wrapper captures
+        obs_costs.enable_capture()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(
         args.arch)
@@ -186,6 +196,10 @@ def main():
     if s.dedup_hits:
         print(f"[serve] in-flight dedup: {s.dedup_hits} admissions "
               f"aliased a live identical prompt")
+    if args.cost_report and eng.last_cost_report is not None:
+        print("[serve] cost attribution (measured vs roofline, "
+              "obs/costs.py):")
+        print(eng.last_cost_report.table())
     for r in reqs[:3]:
         print(f"  req {r.uid}: {r.out_tokens[:10]}...")
 

@@ -1,0 +1,41 @@
+"""jax-version compatibility over AOT compilation artifacts.
+
+``Compiled.cost_analysis()`` changed shape across jax releases: newer
+versions return a flat ``{counter: value}`` dict, older ones a
+one-element list of such dicts, and some backends return ``None`` (or
+raise) when the compiler exposes no cost model at all. Every consumer in
+this repo — the dry-run roofline (``launch/dryrun.py``) and the live
+serving cost-attribution layer (``obs/costs.py``) — parses through THIS
+module so the normalization logic exists exactly once.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+
+def cost_analysis_dict(compiled) -> Dict:
+    """Normalized ``compiled.cost_analysis()``: always a flat dict.
+
+    Newer jax returns a flat dict, older a one-element list of dicts;
+    ``None``, an empty list, or a raising backend all collapse to ``{}``
+    — callers degrade to zero-cost attribution, never crash.
+    """
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
+def flops_bytes(compiled) -> Tuple[float, float]:
+    """(FLOPs, bytes accessed) per invocation, per device; zeros when the
+    backend reports no cost model (the CPU-interpret degradation path)."""
+    d = cost_analysis_dict(compiled)
+
+    def num(key: str) -> float:
+        v = d.get(key, 0.0)
+        return float(v) if isinstance(v, (int, float)) else 0.0
+
+    return num("flops"), num("bytes accessed")

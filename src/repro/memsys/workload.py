@@ -431,7 +431,9 @@ def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,
                  legacy_flash: bool = False) -> Traffic:
     """Traffic for one decode step under a quantization scheme.
 
-    Methods: fp16 | rtn4 | awq | gptq | mx4 -> homogeneous weights in DRAM.
+    Methods: fp32 | fp16 | rtn4 | awq | gptq | mx4 -> homogeneous weights
+             in DRAM (fp32 is the unquantized serving baseline the cost-
+             attribution layer compares QMC against).
              qmc -> dual-precision split across MRAM/ReRAM.
              emems_mram / emems_reram -> homogeneous INT4 in a single NVM.
     """
@@ -439,9 +441,9 @@ def make_traffic(cfg: ModelConfig, method: str, *, seq_len: int = 2048,
     kv = kv_bits_per_step(cfg, seq_len)
     act = act_bits_per_step(cfg)
 
-    if method in ("fp16", "rtn4", "awq", "gptq", "mx4"):
-        bits = {"fp16": 16.0, "rtn4": 4.0, "awq": 4.0, "gptq": 4.0,
-                "mx4": mx.avg_bits}[method]
+    if method in ("fp32", "fp16", "rtn4", "awq", "gptq", "mx4"):
+        bits = {"fp32": 32.0, "fp16": 16.0, "rtn4": 4.0, "awq": 4.0,
+                "gptq": 4.0, "mx4": mx.avg_bits}[method]
         wbits = n_active * bits
         return Traffic(name=method, weight_bits_outlier=0.0,
                        weight_bits_inlier=wbits, kv_bits=kv, act_bits=act,

@@ -1,6 +1,6 @@
-"""Serving observability: metrics registry + Chrome-trace span tracer.
+"""Serving observability: metrics, tracing, and cost attribution.
 
-Two host-side modules the serving stack records itself through:
+Three host-side modules the serving stack records itself through:
 
   * ``obs.metrics`` — counters / gauges / fixed-log-bucket histograms
     with labels, behind a get-or-create :class:`~repro.obs.metrics.
@@ -11,13 +11,23 @@ Two host-side modules the serving stack records itself through:
     point occurrences) exporting Chrome trace-event JSON loadable in
     Perfetto. The span/event naming contract lives in its module
     docstring.
+  * ``obs.costs`` — per-step cost attribution: opt-in capture of XLA
+    ``cost_analysis()`` FLOPs/bytes per serving-jit call shape, roofline
+    drift (measured wall vs bound), and the Eq. (3)/(4) modeled memory
+    cost of the run's engine counters. Off by default (one bool branch
+    per traced call); ``launch/serve.py --cost-report`` and the bench's
+    ``cost_attribution`` section turn it on.
 
-Both keep a process-default instance (``get_registry`` / ``get_tracer``)
-so deep call sites — the steps.py jit-compile wrappers, scheduler wait
-events — need no plumbing; engines and tests may pass explicit instances
-instead. ``launch/serve.py --trace-out/--metrics-out`` turns the
-defaults on and writes both files after a run.
+The first two keep a process-default instance (``get_registry`` /
+``get_tracer``) so deep call sites — the steps.py jit-compile wrappers,
+scheduler wait events — need no plumbing; engines and tests may pass
+explicit instances instead. ``launch/serve.py
+--trace-out/--metrics-out`` turns the defaults on and writes both files
+after a run.
 """
+from repro.obs.costs import (CostReport, FnCost,  # noqa: F401
+                             attribute, capture_enabled, enable_capture,
+                             modeled_memsys)
 from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
                                Registry, get_registry, log_buckets,
                                set_registry)

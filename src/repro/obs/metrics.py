@@ -28,6 +28,23 @@ seconds. The instruments the serving stack registers today:
   * ``serve_jit_retraces_unexpected_total{fn}`` — compiles beyond a step
     function's declared compile surface (the late-flag-flip bug class)
 
+The ``serve_cost_*`` family (written by ``obs/costs.py:flush_metrics``
+only when cost capture ran — see that module). ``fn`` labels are
+``<step-fn>/<shape-key>``, e.g. ``step/C1`` / ``step/C16``:
+
+  * ``serve_cost_flops_total{fn}``        — captured XLA FLOPs executed
+  * ``serve_cost_bytes_total{fn}``        — captured XLA bytes accessed
+  * ``serve_cost_drift_ratio{fn}``        — gauge: measured wall /
+    roofline bound per fn/shape; SUPPRESSED (not set) for rows whose
+    ``cost_analysis()`` capture degraded to zeros, so a backend without
+    a cost model never reports a fake drift of 0
+  * ``serve_cost_modeled_bytes_per_token``     — gauge: Eq. (3)/(4)
+    modeled memory traffic per emitted token
+  * ``serve_cost_modeled_energy_j{system}``    — gauge: modeled
+    per-round energy, ``system`` in ``hetero`` | ``conventional``
+  * ``serve_cost_modeled_latency_s{system}``   — gauge: modeled
+    per-round latency, same label values
+
 Snapshots serialize two ways: :meth:`Registry.snapshot` (JSON-able dict,
 written by ``--metrics-out``) and :meth:`Registry.to_prometheus` (text
 exposition format, scrapeable once an HTTP front door exists).

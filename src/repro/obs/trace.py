@@ -58,6 +58,16 @@ Scheduler / cache / jit events:
   * ``jit/unexpected_retrace`` — cache growth beyond the step's declared
     compile surface: the late-flag-flip bug class, surfaced instead of
     silently stalling a round 10x.
+
+Counter tracks — "C" events rendering as value lanes on the timeline:
+
+  * ``pool/pages``  — per round (``serve/engine.py``): arena pages
+    ``live`` / ``free`` — pool pressure next to the phase spans.
+  * ``sched/queue`` — per round (``serve/engine.py``):
+    ``prefill_pending`` admission-queue depth.
+  * ``cost/<fn>``   — per traced-jit call when ``obs.costs`` capture is
+    on (``serve/steps.py``): cumulative captured ``flops`` / ``bytes``
+    of that step function, e.g. ``cost/step``.
 """
 from __future__ import annotations
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.memsys.workload import chunk_pages_streamed
+from repro.obs import costs as obs_costs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.models.config import ModelConfig
@@ -329,6 +330,9 @@ class ServeEngine:
         self._pool: Optional[PagedKVPool] = None
         self._arena = None
         self.prefix_cache: Optional[PrefixCache] = None
+        # filled by run() when obs.costs capture is enabled: per-step-fn
+        # roofline attribution + modeled memsys cost of the last run
+        self.last_cost_report: Optional[obs_costs.CostReport] = None
 
     def _build_steps(self) -> serve_steps.PagedServeSteps:
         p_struct = None
@@ -421,6 +425,8 @@ class ServeEngine:
         adopt0 = pool.adopt_calls
         tbl0 = pool.tables_rebuilds
         _, jitc0, jits0 = self._steps.jit_counters()
+        cost0 = obs_costs.snapshot(self._steps) \
+            if obs_costs.capture_enabled() else None
         admissions = {"miss": 0, "hit": 0, "dedup": 0}
         cache = self.prefix_cache
         sched = FifoScheduler(SchedulerConfig(
@@ -708,6 +714,11 @@ class ServeEngine:
                 self.stats.step_seconds.append(time.monotonic() - ts)
                 self.stats.step_tokens.append(emitted)
             self.stats.rounds += 1
+            # pool-pressure counter tracks, one sample per round — these
+            # render as Perfetto counter lanes next to the phase spans
+            trc.counter("pool/pages", live=pool.used_count,
+                        free=pool.free_count)
+            trc.counter("sched/queue", prefill_pending=sched.pending)
             trc.complete("round", r_t0, time.perf_counter() - r_t0,
                          lanes=len(order), prefill_lanes=len(plan),
                          decode_lanes=len(act_dec), emitted=emitted)
@@ -722,6 +733,14 @@ class ServeEngine:
         self.stats.jit_compile_s = jits1 - jits0
         self.stats.wall_s = time.monotonic() - t0
         self._flush_metrics(reg, admissions)
+        if cost0 is not None:
+            report = obs_costs.attribute(
+                self._steps, self.stats, cfg=self.cfg,
+                params=self.params, page=self.page,
+                kv_dtype_bits=jnp.dtype(self.cache_dtype).itemsize * 8,
+                baseline=cost0)
+            self.last_cost_report = report
+            obs_costs.flush_metrics(reg, report)
         return requests
 
     def _flush_metrics(self, reg: obs_metrics.Registry,

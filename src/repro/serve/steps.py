@@ -70,6 +70,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import runtime_context as ctx
+from repro.obs import costs as obs_costs
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.launch import mesh as meshlib
@@ -188,16 +189,37 @@ class TracedJit:
     round stall. Counters are per wrapper (one per
     :func:`build_paged_steps` call), so engines sharing an lru-cached
     warm jit correctly count zero compiles of their own.
+
+    With cost capture on (``obs.costs.enable_capture``) the wrapper also
+    keeps per-call-shape tables for the attribution layer: the first
+    call of each shape AOT-lowers it (BEFORE execution — donated buffers
+    are still live) and records ``cost_analysis()`` FLOPs/bytes in
+    ``cost_by_key``; every call then lands in ``calls_by_key`` /
+    ``seconds_by_key``, measured synchronously (``block_until_ready``
+    inside the timed window, so the table holds device time rather than
+    async dispatch time), and emits a cumulative ``cost/<fn>`` Perfetto
+    counter track. ``cost_key(args, kw) -> str`` names the shape (the
+    unified step keys on its token width C); default one key, "call".
+    Capture keys on shapes this WRAPPER has seen, not on jit-cache
+    growth, so fresh engines over an lru-warm jit still capture.
+    Capture off — the default — costs one module-bool branch per call.
     """
 
     def __init__(self, name: str, fn: Callable,
-                 expected_shapes: Optional[int] = None):
+                 expected_shapes: Optional[int] = None,
+                 cost_key: Optional[Callable] = None):
         self.name = name
         self._fn = fn
         self.expected_shapes = expected_shapes
         self.calls = 0
         self.compiles = 0
         self.compile_seconds = 0.0
+        self._cost_key = cost_key
+        self.cost_by_key: dict = {}      # key -> {"flops", "bytes"}/call
+        self.calls_by_key: dict = {}
+        self.seconds_by_key: dict = {}
+        self._cum_flops = 0.0
+        self._cum_bytes = 0.0
 
     def _cache_size(self) -> Optional[int]:
         try:
@@ -206,11 +228,37 @@ class TracedJit:
             return None        # non-jit callable or a jax without the API
 
     def __call__(self, *args, **kw):
+        capture = obs_costs.capture_enabled()
+        if capture:
+            try:
+                key = self._cost_key(args, kw) if self._cost_key \
+                    else "call"
+            except Exception:
+                key = "call"
+            if key not in self.cost_by_key:
+                self.cost_by_key[key] = obs_costs.capture_costs(
+                    self._fn, args, kw)
         before = self._cache_size()
         t0 = time.perf_counter()
         out = self._fn(*args, **kw)
+        if capture:
+            try:
+                jax.block_until_ready(out)
+            except Exception:
+                pass           # non-array outputs: wall stays dispatch time
         dt = time.perf_counter() - t0
         self.calls += 1
+        if capture:
+            self.calls_by_key[key] = self.calls_by_key.get(key, 0) + 1
+            self.seconds_by_key[key] = \
+                self.seconds_by_key.get(key, 0.0) + dt
+            cost = self.cost_by_key[key]
+            self._cum_flops += cost["flops"]
+            self._cum_bytes += cost["bytes"]
+            if self._cum_flops or self._cum_bytes:
+                obs_trace.get_tracer().counter(
+                    f"cost/{self.name}", flops=self._cum_flops,
+                    bytes=self._cum_bytes)
         after = self._cache_size()
         if before is not None and after is not None and after > before:
             grew = after - before
@@ -236,6 +284,13 @@ class TracedJit:
                     "compiles beyond a step's declared compile surface",
                     labels=("fn",)).inc(over, fn=self.name)
         return out
+
+
+def _step_cost_key(args, kw) -> str:
+    """Call-shape key for the unified step's cost tables: its token
+    width C (``tokens`` is positional arg 1) — the engine drives exactly
+    C in {1, chunk}, so the attribution table gets one row per width."""
+    return f"C{args[1].shape[1]}"
 
 
 # ==========================================================================
@@ -375,7 +430,8 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
             max_slots=max_slots, max_pages_per_seq=max_pages_per_seq,
             cache_dtype=cache_dtype, chunk=chunk,
             paged_attention=paged_attention,
-            step=TracedJit("step", step, step_shapes),
+            step=TracedJit("step", step, step_shapes,
+                           cost_key=_step_cost_key),
             page_copy=TracedJit("page_copy", page_copy, 1),
             reset_state=(None if reset is None
                          else TracedJit("reset_state", reset, 1)))
@@ -418,7 +474,8 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
             jax.jit(step_fn,
                     in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh),
                     out_shardings=(l_sh, a_sh),
-                    **_donate((2,))), step_shapes),
+                    **_donate((2,))), step_shapes,
+            cost_key=_step_cost_key),
         page_copy=TracedJit(
             "page_copy",
             jax.jit(_page_copy_body(cfg),
