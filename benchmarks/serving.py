@@ -64,6 +64,12 @@ def _enabled(section: str) -> bool:
 
 CFG_KW = dict(name="serve-bench", family="dense", n_layers=2,
               d_model=128, n_heads=8, n_kv_heads=2, d_ff=256, vocab=256)
+# Steady-state runs per measurement; the fastest (min-wall) run is
+# reported, the timeit convention: on a shared CPU host the lower
+# envelope is the repeatable number, the mean is scheduler noise. The
+# ratio gates (weights qmc-vs-fp32, prefix-cache speedup) compare two
+# ~50 ms walls — single-shot ratios swing ±15% run to run.
+REPEATS = int(os.environ.get("BENCH_REPEATS", "3"))
 CFG = ModelConfig(**CFG_KW)
 N_REQ = 8
 MAX_NEW = 16
@@ -103,12 +109,7 @@ def _pcts(lat):
     return (float(np.percentile(lat, 50)), float(np.percentile(lat, 95)))
 
 
-def _measure(engine_cls, params, slots: int, **kw):
-    # warm-up run pays every jit compile; second run is steady state
-    engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw).run(
-        _requests())
-    eng = engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw)
-    out = eng.run(_requests())
+def _engine_row(eng, out) -> dict:
     toks = sum(len(r.out_tokens) for r in out)
     lat = eng.stats.per_token_latencies()
     p50, p95 = _pcts(lat)
@@ -123,11 +124,50 @@ def _measure(engine_cls, params, slots: int, **kw):
             "pages_peak": eng.stats.pages_peak}
 
 
+def _measure(engine_cls, params, slots: int, **kw):
+    # warm-up run pays every jit compile; then REPEATS steady-state runs,
+    # fastest wall reported (see REPEATS above)
+    engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw).run(
+        _requests())
+    eng, out = None, None
+    for _ in range(REPEATS):
+        e = engine_cls(CFG, params, slots=slots, max_len=MAX_LEN, **kw)
+        o = e.run(_requests())
+        if eng is None or e.stats.wall_s < eng.stats.wall_s:
+            eng, out = e, o
+    return _engine_row(eng, out)
+
+
+def _paired_ratio(make_a, make_b, reqs_fn):
+    """Median of per-pair throughput ratios b/a over REPEATS interleaved
+    run pairs. The two configurations execute back-to-back inside each
+    pair, so slow host drift (frequency scaling, neighbour load — the
+    dominant noise on ~50 ms walls) hits both sides of a pair about
+    equally and cancels in the ratio; the median then rejects the odd
+    pair a burst split. Independent min-walls do not get that
+    cancellation. Returns ((eng_a, res_a), (eng_b, res_b), ratio) where
+    each (eng, res) is that side's fastest run."""
+    best = [None, None]
+    ratios = []
+    for r in range(REPEATS):
+        tps = [0.0, 0.0]
+        order = (0, 1) if r % 2 == 0 else (1, 0)   # cancel ordering bias
+        for i in order:
+            eng = (make_a, make_b)[i]()
+            res = eng.run(reqs_fn())
+            toks = sum(len(rq.out_tokens) for rq in res)
+            tps[i] = toks / eng.stats.wall_s
+            if best[i] is None or eng.stats.wall_s < best[i][0].stats.wall_s:
+                best[i] = (eng, res)
+        ratios.append(tps[1] / max(tps[0], 1e-9))
+    return best[0], best[1], float(np.median(ratios))
+
+
 def run() -> dict:
     params = init_params(CFG, jax.random.PRNGKey(0))
     results = {"config": {"model": CFG.name, "n_requests": N_REQ,
                           "max_new_tokens": MAX_NEW, "max_len": MAX_LEN,
-                          "page": PAGE}}
+                          "page": PAGE, "repeats": REPEATS}}
     if _enabled("slots"):
         results["slots"] = {}
         for slots in (1, 4, 8):
@@ -179,14 +219,20 @@ def run() -> dict:
 def _measure_prefix(params, slots: int) -> dict:
     """Shared-system-prompt tenants, prefix cache on vs off."""
     out = {}
-    for label, on in (("off", False), ("on", True)):
-        # warm-up pays jit compiles; a fresh engine measures steady state
-        # with an initially empty index (intra-batch sharing only)
+    # warm-up pays jit compiles; the measured engines start with an
+    # initially empty index (intra-batch sharing only). Interleaved
+    # paired runs so the speedup ratio cancels host drift.
+    for on in (False, True):
         ServeEngine(CFG, params, slots=slots, max_len=MAX_LEN,
                     page_size=PAGE, prefix_cache=on).run(_tenant_requests())
-        eng = ServeEngine(CFG, params, slots=slots, max_len=MAX_LEN,
-                          page_size=PAGE, prefix_cache=on)
-        res = eng.run(_tenant_requests())
+
+    def mk(on):
+        return lambda: ServeEngine(CFG, params, slots=slots,
+                                   max_len=MAX_LEN, page_size=PAGE,
+                                   prefix_cache=on)
+    best_off, best_on, speedup = _paired_ratio(mk(False), mk(True),
+                                               _tenant_requests)
+    for label, (eng, res) in (("off", best_off), ("on", best_on)):
         toks = sum(len(r.out_tokens) for r in res)
         s = eng.stats
         out[label] = {
@@ -197,9 +243,11 @@ def _measure_prefix(params, slots: int) -> dict:
             "hit_rate": s.hit_rate,
             "prefill_token_reduction": s.prefill_token_reduction,
             "cache_hits": s.cache_hits,
-            "cow_copies": s.cow_copies}
-    speedup = (out["on"]["tokens_per_s"]
-               / max(out["off"]["tokens_per_s"], 1e-9))
+            "cow_copies": s.cow_copies,
+            "tables_rebuilds": s.device_tables_rebuilds,
+            "page_op_flushes": s.page_op_flushes,
+            "page_op_round_trips_saved": s.page_op_round_trips_saved,
+            "solo_rounds": s.solo_rounds}
     out["prefill_speedup"] = speedup
     # DSE views. "cold": the measured batch's prefill WRITES (the first
     # tenant publishes, the rest hit). "steady": residency once the
@@ -236,11 +284,19 @@ def _measure_weights(params) -> dict:
     qparams = quantize_for_serving(
         params, QMCConfig(rho=0.3, granularity="subtile"), tp_shards=1,
         min_dim=64)
-    out = {}
-    for label, p in (("fp32", params), ("qmc", qparams)):
-        out[label] = _measure(ServeEngine, p, 4, page_size=PAGE)
-    out["qmc_vs_fp32_tokens_per_s"] = (
-        out["qmc"]["tokens_per_s"] / max(out["fp32"]["tokens_per_s"], 1e-9))
+    # warm-up pays jit compiles (shared: both variants lower to the same
+    # dense step via the exec-weight plan) + the qmc plan build
+    for p in (params, qparams):
+        ServeEngine(CFG, p, slots=4, max_len=MAX_LEN,
+                    page_size=PAGE).run(_requests())
+    best_f, best_q, ratio = _paired_ratio(
+        lambda: ServeEngine(CFG, params, slots=4, max_len=MAX_LEN,
+                            page_size=PAGE),
+        lambda: ServeEngine(CFG, qparams, slots=4, max_len=MAX_LEN,
+                            page_size=PAGE),
+        _requests)
+    out = {"fp32": _engine_row(*best_f), "qmc": _engine_row(*best_q),
+           "qmc_vs_fp32_tokens_per_s": ratio}
     print(f"serving/weights_qmc_s4,"
           f"{out['qmc']['p50_token_latency_us']:.0f},"
           f"{out['qmc']['tokens_per_s']:.1f}tok/s "

@@ -8,9 +8,16 @@ the roadmap's open items are judged by. This script compares a freshly
 produced bench JSON against the committed baseline snapshot
 (``benchmarks/baselines/serving.json`` — the generated
 ``BENCH_serving.json`` itself is gitignored) and prints a WARN line
-per ratio that moved more than ``--tolerance`` (relative). Warn-only by
-default (exit 0) so noisy CI runners never block a merge; ``--strict``
-exits 1 on any warning for local gatekeeping.
+per ratio that moved more than ``--tolerance`` (relative).
+
+Two ratio families are **gated**, not warn-only: the serving wins the
+paper's thesis stands on (``weights.qmc_vs_fp32_tokens_per_s`` and
+``prefix_cache.slots.*.prefill_speedup``) FAIL the check (exit 1) when
+the current value drops below baseline by more than
+``--gate-tolerance`` (relative, direction-aware: improvements never
+fail). Everything else stays warn-only (exit 0) so noisy CI runners
+never block a merge on incidental ratios; ``--strict`` additionally
+exits 1 on any warning, for local gatekeeping.
 
   python scripts/check_bench_drift.py --current /tmp/bench_current.json
 """
@@ -26,10 +33,19 @@ import sys
 KEY_RATIOS = {
     "slots.4.speedup": "paged_vs_legacy_speedup_s4",
     "slots.8.speedup": "paged_vs_legacy_speedup_s8",
+    "prefix_cache.slots.4.prefill_speedup": "prefix_prefill_speedup_s4",
     "prefix_cache.slots.8.prefill_speedup": "prefix_prefill_speedup_s8",
     "weights.qmc_vs_fp32_tokens_per_s": "qmc_vs_fp32_tokens_per_s",
     "cost_attribution.qmc_vs_fp32_modeled_bytes_per_token":
         "qmc_vs_fp32_modeled_bytes_per_token",
+}
+
+# higher-is-better ratios that fail the check when they regress below
+# baseline beyond --gate-tolerance (improvements never fail)
+GATED = {
+    "prefix_cache.slots.4.prefill_speedup",
+    "prefix_cache.slots.8.prefill_speedup",
+    "weights.qmc_vs_fp32_tokens_per_s",
 }
 
 
@@ -42,15 +58,19 @@ def lookup(doc: dict, path: str):
     return cur if isinstance(cur, (int, float)) else None
 
 
-def compare(current: dict, baseline: dict, tolerance: float):
-    """Yields (name, base, cur, rel_change, warn) per comparable ratio."""
+def compare(current: dict, baseline: dict, tolerance: float,
+            gate_tolerance: float):
+    """Yields (name, base, cur, rel_change, warn, fail) per comparable
+    ratio. ``fail`` is set only for GATED ratios that dropped below
+    baseline by more than ``gate_tolerance``."""
     for path, name in KEY_RATIOS.items():
         base = lookup(baseline, path)
         cur = lookup(current, path)
         if base is None or cur is None:
             continue
         rel = (cur - base) / base if base else float("inf")
-        yield name, base, cur, rel, abs(rel) > tolerance
+        fail = path in GATED and rel < -gate_tolerance
+        yield name, base, cur, rel, abs(rel) > tolerance, fail
 
 
 def main() -> int:
@@ -63,6 +83,11 @@ def main() -> int:
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="relative change that triggers a WARN "
                          "(default 0.25 = 25%%)")
+    ap.add_argument("--gate-tolerance", type=float, default=0.15,
+                    help="relative DROP below baseline that FAILS a "
+                         "gated ratio (default 0.15 = 15%%; sized to "
+                         "the paired-median run-to-run noise of the "
+                         "~50 ms bench walls)")
     ap.add_argument("--strict", action="store_true",
                     help="exit 1 when any ratio warned")
     args = ap.parse_args()
@@ -72,12 +97,14 @@ def main() -> int:
     with open(args.baseline) as f:
         baseline = json.load(f)
 
-    warned = compared = 0
-    for name, base, cur, rel, warn in compare(current, baseline,
-                                              args.tolerance):
+    warned = failed = compared = 0
+    for name, base, cur, rel, warn, fail in compare(
+            current, baseline, args.tolerance, args.gate_tolerance):
         compared += 1
-        tag = "WARN" if warn else "ok  "
-        if warn:
+        tag = "FAIL" if fail else ("WARN" if warn else "ok  ")
+        if fail:
+            failed += 1
+        elif warn:
             warned += 1
         print(f"{tag} {name}: baseline={base:.4f} current={cur:.4f} "
               f"({rel:+.1%})")
@@ -85,8 +112,11 @@ def main() -> int:
         print("WARN no comparable ratios between the two files "
               "(section mismatch?)")
         warned += 1
-    print(f"bench-drift: {warned}/{max(compared, 1)} ratios moved more "
-          f"than {args.tolerance:.0%}")
+    print(f"bench-drift: {failed} gated regressions, {warned}/"
+          f"{max(compared, 1)} ratios moved more than "
+          f"{args.tolerance:.0%}")
+    if failed:
+        return 1
     return 1 if args.strict and warned else 0
 
 

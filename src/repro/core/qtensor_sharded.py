@@ -90,16 +90,22 @@ def qmm_sharded_ref(x: jax.Array, sqt: ShardedQTensor,
 
 def qmm_shard_map(x: jax.Array, sqt: ShardedQTensor, mesh,
                   axis: str = "model",
-                  dp: Tuple[str, ...] = ()) -> jax.Array:
+                  dp: Tuple[str, ...] = (),
+                  use_pallas: bool = False) -> jax.Array:
     """TP-local quantized matmul under shard_map.
 
     Column-sharded (shard_axis=1): every device computes its N/S output
     columns from its batch slice of x. Row-sharded (shard_axis=0): devices
     hold K/S input rows; x arrives sharded on its last dim; partials psum.
-    Batch rows ride the dp axes untouched.
+    Batch rows ride the dp axes untouched. The shard-local matmul goes
+    through kernels.ops.qmm, so the block_m plan (decode-width vs
+    column-strip, skinny-XLA vs ref) is picked per compiled step width
+    exactly as on the single-device path.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
+
+    from repro.kernels import ops as kops
 
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
@@ -120,15 +126,14 @@ def qmm_shard_map(x: jax.Array, sqt: ShardedQTensor, mesh,
 
     if sqt.shard_axis == 1:
         def body(xl, q):
-            w = dequantize_qtensor(q.local(0), xl.dtype)
-            return jnp.matmul(xl, w)
+            return kops.qmm(xl, q.local(0), use_pallas=use_pallas)
         y = shard_map(body, mesh=mesh,
                       in_specs=(P(bspec, None), qt_specs),
                       out_specs=P(bspec, axis))(x2, sqt)
     else:
         def body(xl, q):
-            w = dequantize_qtensor(q.local(0), xl.dtype)
-            return jax.lax.psum(jnp.matmul(xl, w), axis)
+            yl = kops.qmm(xl, q.local(0), use_pallas=use_pallas)
+            return jax.lax.psum(yl, axis)
         y = shard_map(body, mesh=mesh,
                       in_specs=(P(bspec, axis), qt_specs),
                       out_specs=P(bspec, None))(x2, sqt)

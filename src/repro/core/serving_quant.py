@@ -13,6 +13,21 @@ model pytree into the deployment format:
 `serving_params_struct(...)` builds the same pytree out of
 ShapeDtypeStructs without allocating — the multi-pod dry-run lowers against
 this (the 314B/398B models never exist on the CPU host).
+
+`build_exec_weights(params)` is the serving **weight execution plan**: a
+one-time, per-process lowering of the stream-format leaves into whatever
+the executing backend multiplies fastest. The QMC streams are the
+*storage and transport* format — they are what the memsys DSE charges
+bytes/energy for, and on TPU the stream-direct Pallas kernels
+(``kernels/qmm.py``) consume them as-is. XLA backends without a fused
+dequant-matmul (the CPU serving bench) would otherwise re-materialize
+the dense working set inside every step call; the plan does that
+re-materialization exactly once at engine setup instead (the same
+load-time repack idiom llama.cpp/ExecuTorch use for formats their
+matmul kernels cannot consume directly), so the per-call serving graph
+degenerates to a dense matmul. ``ServeEngine`` builds it lazily and
+keeps the stream-format tree as the source of truth for cost
+attribution (``obs/costs.py`` models bytes/token from the streams).
 """
 from __future__ import annotations
 
@@ -167,6 +182,39 @@ def serving_params_struct(params_struct, qmc: QMCConfig, tp_shards: int = 1,
     """Abstract conversion (dry-run): params_struct holds ShapeDtypeStructs."""
     return _walk(params_struct, qmc, tp_shards, abstract=True,
                  use_int4=use_int4, min_dim=min_dim)
+
+
+def build_exec_weights(params, dtype=jnp.float32):
+    """Lower a serving-format pytree to its execution form (see module
+    docstring): every QTensor / ShardedQTensor leaf dequantizes to a
+    dense ``dtype`` array of its logical shape (stacked leaves via vmap
+    over the extra leading dims); everything else passes through.
+    Returns ``params`` unchanged (same object) when no stream leaves are
+    present, so dense engines pay nothing."""
+    from repro.core.qtensor import dequantize_qtensor
+    from repro.core.qtensor_sharded import dequantize_sharded
+
+    def is_q(x):
+        return isinstance(x, (QTensor, ShardedQTensor))
+
+    if not any(is_q(l) for l in
+               jax.tree_util.tree_leaves(params, is_leaf=is_q)):
+        return params
+
+    def lower(leaf):
+        if isinstance(leaf, ShardedQTensor):
+            fn = lambda q: dequantize_sharded(q, dtype)  # noqa: E731
+            extra = leaf.in_codes.ndim - 4   # [shards, k, r, c] is rank 4
+        elif isinstance(leaf, QTensor):
+            fn = lambda q: dequantize_qtensor(q, dtype)  # noqa: E731
+            extra = leaf.in_codes.ndim - 3   # [k, r, c] is rank 3
+        else:
+            return leaf
+        for _ in range(extra):               # stacked [G]/[G, E] leaves
+            fn = jax.vmap(fn)
+        return fn(leaf)
+
+    return jax.tree_util.tree_map(lower, params, is_leaf=is_q)
 
 
 def _walk(params, qmc, tp_shards, abstract, use_int4, min_dim):

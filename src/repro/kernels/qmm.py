@@ -1,25 +1,53 @@
-"""Pallas TPU kernel: dual-stream QMC matmul (the Model Weight Controller).
+"""Pallas TPU kernels: dual-stream QMC matmul (the Model Weight Controller).
 
 The paper's heterogeneous memory controller fetches outlier weights from
 MRAM and inlier weights from MLC ReRAM concurrently and merges them before
 they reach the compute unit (Eq. 3: T = max(T_mram, T_reram) + T_sync).
-On TPU the analogue is this kernel: the two packed code streams live in HBM;
-for every (128, 128) weight tile the kernel pulls the 16 constituent (8, 128)
-subtiles from whichever stream owns them, dequantizes them next to the MXU in
-VMEM, and feeds the reconstructed slice to the matmul accumulator.
+On TPU the analogue is these kernels: the two packed code streams live in
+HBM; for every weight tile the kernel pulls the constituent (8, 128)
+subtiles from whichever stream owns them, dequantizes them next to the MXU
+in VMEM, and feeds the reconstructed slice to the matmul accumulator.
 
-Grid: (M/bm, N/128, K/128, 16). The innermost axis walks the 16 subtile rows
-of the current K tile; per-subtile stream tags/positions are scalar-prefetched
-(SMEM) so the BlockSpec index maps can do data-dependent fetches — the same
-mechanism block-sparse TPU kernels use. VMEM working set per step:
-x tile (bm x 128 x 4B) + 2 subtiles (8 x 128) + scales + fp32 accumulator
-(bm x 128 x 4B) ~= 134 KB at bm=128 — comfortably inside v5e's ~16 MB VMEM,
-leaving room for double buffering of the streamed subtiles.
+Tiling contract (decode-width vs column-strip)
+----------------------------------------------
+Two tilings share one stream format, selected by ``kernels.ops.qmm_plan``
+on the flattened activation width M (= B*C under the serving step, so the
+choice is keyed on the engine's compiled step widths C in {1, chunk}):
 
-On real hardware the 8-deep MXU issue is hidden behind the weight-stream DMA
-(decode is bandwidth-bound — exactly the paper's regime); DESIGN.md describes
-the column-strip variant that restores 128-deep MXU ops for compute-bound
-prefill.
+* **Decode-width** (``qmm_pallas``, ``block_m=8``, wide ``block_n``) — the
+  skinny-M shape decode drives (M = live slots; ops.qmm right-pads M to
+  the next multiple of 8 and slices the result). Grid
+  ``(M/bm, N/bn, K/128, 16 * bn/128)``: the innermost axis walks the
+  ``bn/128`` column subtiles of each of the 16 subtile rows of the
+  current K tile, so the x block (``bm x 8``, indexed by (i, k, s) only)
+  stays resident across the whole N strip and the scalar-prefetched
+  tag/pos tables are fetched once per kernel launch and reused across
+  both the M axis and the strip. Per-step VMEM at bm=8, bn=512:
+  x (8x8x4B) + 2 code subtiles (2x8x128) + scales (2x128x4B) + fp32
+  accumulator (8x512x4B) + y (8x512x4B) ~= 36 KB — deep double-buffering
+  headroom inside a ~16 MB VMEM budget.
+* **Column-strip** (``qmm_pallas_colstrip``, ``block_m>=128``) — the
+  compute-bound prefill/training shape. Grid ``(M/bm, N/128, K/128, 16)``;
+  the 16 subtiles of one (128, 128) weight tile are dequantized into a
+  VMEM staging tile and the MXU sees ONE 128-deep
+  ``x[bm,128] @ staging[128,128]`` op per K tile instead of sixteen
+  8-deep ops — contiguous same-stream subtile runs of a column are
+  fetched back to back while the x tile (indexed by (i, k) only) stays
+  resident. Per-step VMEM at bm=128: x (128x128x4B) + staging
+  (128x128x4B) + acc (128x128x4B) + 2 code subtiles + scales ~= 200 KB.
+
+Both tilings route every *dead-stream* fetch through a hold table
+(``_hold_tables``): instead of loading stream slot 0, the BlockSpec index
+map re-issues the most recently fetched live slot of that stream, so the
+Pallas pipeline's same-index elision turns the paper's "2x weight
+traffic" select-merge into at most one subtile fetch per stream per run
+of equal tags — on real hardware the dead stream costs no DMA at all.
+Block-granular index maps cannot express arbitrary element offsets, so
+a literal contiguous-run burst is not representable; repeated-index
+elision is the TPU-native equivalent.
+
+``interpret=True`` executes the kernel bodies on CPU for validation; the
+serving CPU fallback is the XLA path in ``kernels/ops.py``, not these.
 """
 from __future__ import annotations
 
@@ -33,79 +61,106 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.qtensor import QTensor
 
 
-def _qmm_kernel(tags_ref, pos_ref,          # scalar prefetch (SMEM)
-                x_ref, in_ref, out_ref, sin_ref, sout_ref,  # VMEM in
-                y_ref,                       # VMEM out
-                acc_ref,                     # VMEM scratch
-                *, n_sub_k: int, out_dtype):
-    """One grid step: accumulate x[bm, 8] @ subtile[8, 128] into acc."""
-    s = pl.program_id(3)                     # subtile row within the K tile
-    k = pl.program_id(2)
-    j = pl.program_id(1)
+def _hold_tables(tags: jax.Array, pos: jax.Array):
+    """Per-stream DMA-elision index tables, [gr, gc] each.
 
-    @pl.when((k == 0) & (s == 0))
+    ``hold_in[gi, j]`` is the inlier-stream slot to *fetch* when the
+    kernel is at subtile row gi of column j: the subtile's own slot when
+    the tag routes it to the inlier stream, else the most recently
+    fetched inlier slot of that column (so the fetch index repeats and
+    the Pallas pipeline elides the copy). Rows before the first live
+    slot fall back to 0 — always valid because ``quantize_qtensor`` pads
+    empty streams with one dummy tile. ``hold_out`` is the mirror image.
+    Pure jnp (runs under jit: tags/pos are traced pytree leaves).
+    """
+    def hold(mine):
+        marked = jnp.where(mine, pos, -1)                     # [gr, gc]
+        # "last non-(-1) above me" prefix scan down the subtile rows
+        last = jax.lax.associative_scan(
+            lambda a, b: jnp.where(b >= 0, b, a), marked, axis=0)
+        return jnp.maximum(last, 0).astype(jnp.int32)
+
+    return hold(~tags), hold(tags)
+
+
+def _qmm_kernel(tags_ref, hin_ref, hout_ref,   # scalar prefetch (SMEM)
+                x_ref, in_ref, out_ref, sin_ref, sout_ref,  # VMEM in
+                y_ref,                          # VMEM out
+                acc_ref,                        # VMEM scratch
+                *, n_sub_k: int, cn: int, out_dtype):
+    """Decode-width step: accumulate x[bm, 8] @ subtile[8, 128] into the
+    strip accumulator column jj of the current N strip."""
+    t = pl.program_id(3)                        # s * cn + jj
+    s = t // cn
+    jj = t % cn
+    k = pl.program_id(2)
+
+    @pl.when((k == 0) & (t == 0))
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Merge point: choose the stream this subtile was routed to at PTQ time.
-    gi = k * n_sub_k + s                     # global subtile row index
-    is_out = tags_ref[gi, j]
+    # Merge point: choose the stream this subtile was routed to at PTQ
+    # time (the dead stream's ref re-fetched its held slot — no new DMA).
+    gi = k * n_sub_k + s
+    gcol = pl.program_id(1) * cn + jj
+    is_out = tags_ref[gi, gcol]
     w_in = in_ref[0].astype(jnp.float32) * sin_ref[...]
     w_out = out_ref[0].astype(jnp.float32) * sout_ref[...]
-    w = jnp.where(is_out > 0, w_out, w_in)   # [8, 128] dequantized
+    w = jnp.where(is_out > 0, w_out, w_in)      # [8, 128] dequantized
 
-    xs = x_ref[...].astype(jnp.float32)      # [bm, 8] (sliced by BlockSpec)
-    acc_ref[...] += jax.lax.dot_general(
+    xs = x_ref[...].astype(jnp.float32)         # [bm, 8]
+    acc_ref[:, pl.dslice(jj * 128, 128)] += jax.lax.dot_general(
         xs, w, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
-    @pl.when((k == pl.num_programs(2) - 1) & (s == n_sub_k - 1))
+    @pl.when((k == pl.num_programs(2) - 1)
+             & (t == pl.num_programs(3) - 1))
     def _done():
         y_ref[...] = acc_ref[...].astype(out_dtype)
 
 
-def qmm_pallas(x: jax.Array, qt: QTensor, *, block_m: int = 128,
-               interpret: bool = True) -> jax.Array:
-    """x [M, K] @ dequant(qt) [K, N] via the dual-stream Pallas kernel.
+def qmm_pallas(x: jax.Array, qt: QTensor, *, block_m: int = 8,
+               block_n: int = 128, interpret: bool = True) -> jax.Array:
+    """x [M, K] @ dequant(qt) [K, N] via the decode-width tiling.
 
-    Requires M % block_m == 0, K % 128 == 0, N % 128 == 0 (production tiles).
-    `interpret=True` executes the kernel body on CPU for validation; on a
-    real TPU backend pass interpret=False.
+    Requires M % block_m == 0, K % 128 == 0, N % block_n == 0 and
+    block_n % 128 == 0 (``kernels.ops.qmm`` pads M and picks the blocks;
+    see the module docstring for the tiling contract). ``interpret=True``
+    executes the kernel body on CPU; pass False on a real TPU backend.
     """
     m, k_dim = x.shape
     k_w, n = qt.shape
     assert k_dim == k_w, (x.shape, qt.shape)
     r, c = qt.subtile
     assert (r, c) == (8, 128), "kernel assumes (8,128) subtiles"
-    assert m % block_m == 0 and k_dim % 128 == 0 and n % 128 == 0
+    assert m % block_m == 0 and k_dim % 128 == 0
+    assert block_n % 128 == 0 and n % block_n == 0
 
     n_sub_k = 128 // r                       # 16 subtile rows per K tile
-    grid = (m // block_m, n // 128, k_dim // 128, n_sub_k)
+    cn = block_n // 128                      # column subtiles per N strip
+    grid = (m // block_m, n // block_n, k_dim // 128, n_sub_k * cn)
 
     tags = qt.is_out.astype(jnp.int32)       # [gr, gc]
-    pos = qt.stream_pos.astype(jnp.int32)    # [gr, gc]
+    hold_in, hold_out = _hold_tables(qt.is_out, qt.stream_pos)
 
-    def x_map(i, j, k, s, tags_ref, pos_ref):
-        return (i, k * n_sub_k + s)
+    def x_map(i, j, k, t, tags_ref, hin_ref, hout_ref):
+        return (i, k * n_sub_k + t // cn)
 
-    def in_map(i, j, k, s, tags_ref, pos_ref):
-        gi = k * n_sub_k + s
-        p = pos_ref[gi, j]
-        # outlier subtiles read stream slot 0 (discarded by the select)
-        return (jnp.where(tags_ref[gi, j] > 0, 0, p), 0, 0)
+    def in_map(i, j, k, t, tags_ref, hin_ref, hout_ref):
+        gi = k * n_sub_k + t // cn
+        return (hin_ref[gi, j * cn + t % cn], 0, 0)
 
-    def out_map(i, j, k, s, tags_ref, pos_ref):
-        gi = k * n_sub_k + s
-        p = pos_ref[gi, j]
-        return (jnp.where(tags_ref[gi, j] > 0, p, 0), 0, 0)
+    def out_map(i, j, k, t, tags_ref, hin_ref, hout_ref):
+        gi = k * n_sub_k + t // cn
+        return (hout_ref[gi, j * cn + t % cn], 0, 0)
 
-    def scale_map(i, j, k, s, tags_ref, pos_ref):
-        return (0, j)
+    def scale_map(i, j, k, t, tags_ref, hin_ref, hout_ref):
+        return (0, j * cn + t % cn)
 
-    def y_map(i, j, k, s, tags_ref, pos_ref):
+    def y_map(i, j, k, t, tags_ref, hin_ref, hout_ref):
         return (i, j)
 
-    kernel = functools.partial(_qmm_kernel, n_sub_k=n_sub_k,
+    kernel = functools.partial(_qmm_kernel, n_sub_k=n_sub_k, cn=cn,
                                out_dtype=x.dtype)
     # The kernel consumes codes as int8; on TPU the int4->int8 container
     # conversion happens in the load path for free.
@@ -114,7 +169,7 @@ def qmm_pallas(x: jax.Array, qt: QTensor, *, block_m: int = 128,
     call = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_m, 8), x_map),
@@ -123,11 +178,107 @@ def qmm_pallas(x: jax.Array, qt: QTensor, *, block_m: int = 128,
                 pl.BlockSpec((1, 128), scale_map),
                 pl.BlockSpec((1, 128), scale_map),
             ],
-            out_specs=pl.BlockSpec((block_m, 128), y_map),
-            scratch_shapes=[pltpu.VMEM((block_m, 128), jnp.float32)],
+            out_specs=pl.BlockSpec((block_m, block_n), y_map),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         interpret=interpret,
     )
-    return call(tags, pos, x, in_codes, qt.out_codes,
+    return call(tags, hold_in, hold_out, x, in_codes, qt.out_codes,
+                qt.scale_in, qt.scale_out)
+
+
+def _qmm_colstrip_kernel(tags_ref, hin_ref, hout_ref,
+                         x_ref, in_ref, out_ref, sin_ref, sout_ref,
+                         y_ref,
+                         acc_ref, stage_ref,
+                         *, n_sub_k: int, out_dtype):
+    """Column-strip step: stage 16 dequantized subtiles into a (128, 128)
+    VMEM tile, then issue ONE 128-deep MXU op per K tile."""
+    s = pl.program_id(3)
+    k = pl.program_id(2)
+    j = pl.program_id(1)
+
+    @pl.when((k == 0) & (s == 0))
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    gi = k * n_sub_k + s
+    is_out = tags_ref[gi, j]
+    w_in = in_ref[0].astype(jnp.float32) * sin_ref[...]
+    w_out = out_ref[0].astype(jnp.float32) * sout_ref[...]
+    stage_ref[pl.dslice(s * 8, 8), :] = jnp.where(is_out > 0, w_out, w_in)
+
+    @pl.when(s == n_sub_k - 1)
+    def _accum():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...].astype(jnp.float32), stage_ref[...],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when((k == pl.num_programs(2) - 1) & (s == n_sub_k - 1))
+    def _done():
+        y_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def qmm_pallas_colstrip(x: jax.Array, qt: QTensor, *, block_m: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """x [M, K] @ dequant(qt) [K, N] via the column-strip tiling
+    (128-deep MXU accumulation — the compute-bound prefill shape).
+
+    Requires M % block_m == 0 (block_m >= 128), K % 128 == 0,
+    N % 128 == 0."""
+    m, k_dim = x.shape
+    k_w, n = qt.shape
+    assert k_dim == k_w, (x.shape, qt.shape)
+    r, c = qt.subtile
+    assert (r, c) == (8, 128), "kernel assumes (8,128) subtiles"
+    assert block_m >= 128 and m % block_m == 0
+    assert k_dim % 128 == 0 and n % 128 == 0
+
+    n_sub_k = 128 // r
+    grid = (m // block_m, n // 128, k_dim // 128, n_sub_k)
+
+    tags = qt.is_out.astype(jnp.int32)
+    hold_in, hold_out = _hold_tables(qt.is_out, qt.stream_pos)
+
+    def x_map(i, j, k, s, tags_ref, hin_ref, hout_ref):
+        return (i, k)
+
+    def in_map(i, j, k, s, tags_ref, hin_ref, hout_ref):
+        return (hin_ref[k * n_sub_k + s, j], 0, 0)
+
+    def out_map(i, j, k, s, tags_ref, hin_ref, hout_ref):
+        return (hout_ref[k * n_sub_k + s, j], 0, 0)
+
+    def scale_map(i, j, k, s, tags_ref, hin_ref, hout_ref):
+        return (0, j)
+
+    def y_map(i, j, k, s, tags_ref, hin_ref, hout_ref):
+        return (i, j)
+
+    kernel = functools.partial(_qmm_colstrip_kernel, n_sub_k=n_sub_k,
+                               out_dtype=x.dtype)
+    in_codes = qt.in_codes.astype(jnp.int8)
+
+    call = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, 128), x_map),
+                pl.BlockSpec((1, r, c), in_map),
+                pl.BlockSpec((1, r, c), out_map),
+                pl.BlockSpec((1, 128), scale_map),
+                pl.BlockSpec((1, 128), scale_map),
+            ],
+            out_specs=pl.BlockSpec((block_m, 128), y_map),
+            scratch_shapes=[pltpu.VMEM((block_m, 128), jnp.float32),
+                            pltpu.VMEM((128, 128), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=interpret,
+    )
+    return call(tags, hold_in, hold_out, x, in_codes, qt.out_codes,
                 qt.scale_in, qt.scale_out)

@@ -38,7 +38,13 @@ def matmul_any(x: jax.Array, w, use_pallas: bool = False,
         if mesh is not None and "model" in mesh.axis_names \
                 and w.n_shards == mesh.devices.shape[
                     list(mesh.axis_names).index("model")]:
-            return qmm_shard_map(x, w, mesh, dp=ctx.current_dp())
+            return qmm_shard_map(x, w, mesh, dp=ctx.current_dp(),
+                                 use_pallas=use_pallas)
+        if w.n_shards == 1:
+            # Single-shard serving stack: dispatch through kernels.ops so
+            # the block_m plan (skinny-XLA / decode-width / column-strip)
+            # applies; multi-shard-without-mesh keeps the sharded oracle.
+            return kops.qmm(x, w.local(0), use_pallas=use_pallas)
         return qmm_sharded_ref(x, w)
     if isinstance(w, QTensor):
         return kops.qmm(x, w, use_pallas=use_pallas)

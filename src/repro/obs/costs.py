@@ -144,7 +144,8 @@ class FnCost:
 def _traced_members(step_set):
     """The step set's TracedJit-like members, duck-typed (no import of
     ``serve.steps`` — it imports this module)."""
-    for name in ("step", "page_copy", "reset_state"):
+    for name in ("step", "solo_step", "page_copy", "reset_state",
+                 "apply_page_ops"):
         fn = getattr(step_set, name, None)
         if fn is not None and hasattr(fn, "cost_by_key"):
             yield fn

@@ -94,13 +94,23 @@ class EngineStats:
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     # --- observability (obs/) ------------------------------------------
     rounds: int = 0                  # engine rounds that ran a jit step
-    # host↔device page-op round trips (the prefix-cache 0.41x suspects):
+    # host↔device page-op round trips (the host overhead that once made
+    # cached prefill slower than uncached, now fused — see below):
     # adopt_calls/device_tables_rebuilds are fed by PagedKVPool counters
     # (serve/paged_kv.py), page_copy_calls counts the engine's COW
     # page-copy dispatches (the device half of pool.cow)
     adopt_calls: int = 0
     page_copy_calls: int = 0
     device_tables_rebuilds: int = 0
+    # batched page-ops (serve/steps.py apply_page_ops): flushes counts
+    # fused dispatches, batched counts the individual ops they absorbed
+    # (COW copies + state resets + the round's table rebuild) — the
+    # difference is host↔device round trips the fusion saved vs the
+    # one-dispatch-per-op admit path
+    page_op_flushes: int = 0
+    page_ops_batched: int = 0
+    # rounds run through the B=1 solo-lane step (exactly one live lane)
+    solo_rounds: int = 0
     # serving-jit compiles observed during this run (TracedJit deltas
     # over the step set — nonzero on a warm engine means an unexpected
     # retrace) and the wall seconds those compiling calls took
@@ -121,6 +131,11 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def page_op_round_trips_saved(self) -> int:
+        """Device dispatches the fused page-op path avoided."""
+        return max(0, self.page_ops_batched - self.page_op_flushes)
 
     @property
     def hit_rate(self) -> float:
@@ -217,9 +232,12 @@ class ServeEngine:
     stacks interleave chunk rounds and decode rounds because the SSM
     recurrence cannot mix a 1-token update into a multi-token scan
     bitwise). The default — one chunk covers the longest admissible
-    prompt — is "monolithic" prefill through the very same ragged path;
-    either way the engine compiles exactly two step shapes (C = 1 and
-    C = chunk), never a pow2 bucket zoo.
+    prompt — is "monolithic" prefill through the very same ragged path.
+    Each round runs at the smallest width on the compiled ladder that
+    covers its widest grant: C = 1 for pure decode, else a pow2 rung
+    from ``serve_steps.width_ladder`` — so a cached-prefix suffix or a
+    short tail chunk is not padded out to the full chunk. The ladder is
+    log2(chunk/8) + 2 shapes, lru-shared across engines.
 
     ``prefix_cache=True`` keeps finished prompts' full KV pages in a radix
     index (``serve/prefix_cache.py``): admissions whose prompt shares a
@@ -240,6 +258,21 @@ class ServeEngine:
     block-table width — token-identical to the reference gather under
     greedy decoding; ``EngineStats`` records the gather-work gap either
     way.
+
+    ``weight_plan=True`` (default) lowers QMC stream-format weights once
+    at engine setup into the backend's execution form
+    (``core.serving_quant.build_exec_weights``) so the per-call step
+    graph is as lean as the dense engine's; ``self.params`` keeps the
+    stream tree for cost attribution. Dense weights are unaffected;
+    mesh engines keep TP-local stream compute regardless.
+
+    Per round, all page maintenance (COW copies, admission state resets,
+    the device block-table rebuild) is queued host-side and flushed in
+    ONE fused ``apply_page_ops`` jit call before the step — pure decode
+    rounds with clean tables skip the dispatch entirely — and rounds
+    with exactly one live lane run the B=1 ``solo_step`` instead of the
+    full-width batch (``EngineStats.solo_rounds``), which is what keeps
+    a cache-miss leader prefill from paying ``slots``-wide dead compute.
 
     ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
     sharded: the arena's page axis over ``data``, attention heads / TP
@@ -268,6 +301,7 @@ class ServeEngine:
                  step_set: Optional[serve_steps.PagedServeSteps] = None,
                  inflight_dedup: Optional[bool] = None,
                  paged_attention: bool = False,
+                 weight_plan: bool = True,
                  tracer: Optional[obs_trace.Tracer] = None,
                  metrics: Optional[obs_metrics.Registry] = None):
         if cfg.is_encdec or cfg.n_vis_tokens:
@@ -299,6 +333,7 @@ class ServeEngine:
                                                           page_size)))
         self.chunk = chunk_tokens or serve_steps.default_chunk(
             self.max_pages_per_seq, page_size)
+        self._widths = serve_steps.width_ladder(self.chunk)
         self.stats = EngineStats()
         self.paged_attention = paged_attention
         self._tracer = tracer          # None -> process default at run()
@@ -324,6 +359,24 @@ class ServeEngine:
                     "(cfg/mesh/page/n_pages/slots/cache_dtype/chunk must "
                     "match)")
         self._steps = step_set
+        # serving weight plan (core/serving_quant.build_exec_weights):
+        # the stream-format tree stays the source of truth (self.params,
+        # cost attribution); the step consumes the one-time execution
+        # lowering. Single-device only — mesh engines run TP-local
+        # through qmm_shard_map on the streams themselves.
+        self._weight_plan = weight_plan and mesh is None
+        self._exec_params = None
+        if self._weight_plan:
+            # build at engine setup, like the jit warm-up: run() walls
+            # must measure serving, not the one-time lowering
+            from repro.core.serving_quant import build_exec_weights
+            self._exec_params = jax.block_until_ready(
+                build_exec_weights(self.params))
+        # page ops queued by seat() and flushed once per round through
+        # the fused apply_page_ops jit (steps without it — a prebuilt
+        # legacy step_set — keep the one-dispatch-per-op path)
+        self._pending_copies: List = []
+        self._pending_resets: List[int] = []
         # pool + arena (+ prefix index) persist across run() calls so
         # cached pages survive between batches, server-style
         self._use_prefix = prefix_cache
@@ -366,6 +419,57 @@ class ServeEngine:
                 self.prefix_cache = PrefixCache(self._pool,
                                                 tracer=self._tracer)
         return self._pool
+
+    def _step_params(self):
+        """Params tree the jitted step consumes: the lazily built weight
+        execution plan, or the raw tree when the plan is off / mesh."""
+        if not self._weight_plan:
+            return self.params
+        if self._exec_params is None:
+            from repro.core.serving_quant import build_exec_weights
+            self._exec_params = build_exec_weights(self.params)
+        return self._exec_params
+
+    def _flush_page_ops(self, pool: PagedKVPool):
+        """Apply the round's queued page copies / state resets and the
+        block-table rebuild in ONE fused jit call; a round with nothing
+        queued and clean tables skips the dispatch entirely. Returns the
+        arena the step should consume."""
+        copies, resets = self._pending_copies, self._pending_resets
+        if self._steps.apply_page_ops is None:   # legacy step set
+            for cw in copies:
+                self._arena = self._steps.page_copy(self._arena, *cw)
+            for s in resets:
+                self._arena = self._steps.reset_state(self._arena, s)
+            copies.clear()
+            resets.clear()
+            return pool.install_tables(self._arena)
+        if not (copies or resets or pool.tables_dirty):
+            return self._arena
+        pool.check_tables()
+        tables = jnp.asarray(pool.block_tables)
+        reset_mask = np.zeros(self.slots, bool)
+        for s in resets:
+            reset_mask[s] = True
+        n_ops = len(copies) + len(resets) + 1
+        first = True
+        while first or copies:      # > slots copies drain in extra calls
+            src = np.zeros(self.slots, np.int32)
+            dst = np.zeros(self.slots, np.int32)
+            batch, copies[:] = copies[:self.slots], copies[self.slots:]
+            for i, (a, b) in enumerate(batch):
+                src[i], dst[i] = a, b
+            self._arena = self._steps.apply_page_ops(
+                self._arena, jnp.asarray(src), jnp.asarray(dst),
+                tables, jnp.asarray(reset_mask))
+            self.stats.page_op_flushes += 1
+            reset_mask[:] = False
+            first = False
+        pool.tables_rebuilds += 1
+        pool.tables_dirty = False
+        self.stats.page_ops_batched += n_ops
+        resets.clear()
+        return self._arena
 
     def _alloc(self, slot: int, n_tokens: int) -> Optional[List[int]]:
         """pool.ensure with LRU eviction of unpinned cached pages as the
@@ -421,6 +525,8 @@ class ServeEngine:
             if pool.slot_pages[s]:
                 pool.free_slot(s)
         pool.pages_peak = pool.used_count
+        self._pending_copies.clear()   # an aborted run's stale queue
+        self._pending_resets.clear()
         cow0 = pool.cow_copies
         adopt0 = pool.adopt_calls
         tbl0 = pool.tables_rebuilds
@@ -509,10 +615,13 @@ class ServeEngine:
                 self.stats.cache_evictions += 1
                 cow = pool.cow(s, start)
             if cow is not None:
-                self._arena = self._steps.page_copy(self._arena, *cow)
+                # queued, not dispatched: the whole round's copies /
+                # resets / table rebuild fuse into one apply_page_ops
+                # call right before the step (_flush_page_ops)
+                self._pending_copies.append(cow)
                 self.stats.page_copy_calls += 1
             if self._steps.reset_state is not None:
-                self._arena = self._steps.reset_state(self._arena, s)
+                self._pending_resets.append(s)
             active[s] = req
             pos[s] = start
             sched.on_admit(s)
@@ -617,7 +726,12 @@ class ServeEngine:
 
             with phase("round/host_prep"):
                 max_n = max(plan.values(), default=0)
-                c_len = self.chunk if max_n > 1 else 1
+                # smallest compiled width covering the widest grant
+                # (pow2 ladder — see the class docstring); pure-decode
+                # rounds stay at the dedicated C = 1 shape
+                c_len = 1 if max_n <= 1 else min(
+                    [w for w in self._widths if w >= max_n]
+                    or [self.chunk])
                 toks = np.zeros((self.slots, c_len), np.int32)
                 start = np.zeros(self.slots, np.int32)
                 n_new = np.zeros(self.slots, np.int32)
@@ -652,14 +766,31 @@ class ServeEngine:
                     self.stats.prefill_kv_pages_written += (
                         pages_for(int(pos[s]) + plan[s], self.page)
                         - int(pos[s]) // self.page)
-                cache_in = pool.install_tables(self._arena)
+                cache_in = self._flush_page_ops(pool)
+                live = np.flatnonzero(n_new > 0)
+                solo = (self._steps.solo_step is not None
+                        and len(live) == 1)
             with phase("round/device_step"):
-                logits, self._arena = self._steps.step(
-                    self.params, jnp.asarray(toks), cache_in,
-                    jnp.asarray(start), jnp.asarray(n_new))
-                nxt_dev = jnp.argmax(logits, axis=-1)       # [B, C]
-                jax.block_until_ready(nxt_dev)
-                nxt = np.asarray(nxt_dev)
+                if solo:
+                    s0 = int(live[0])
+                    logits, self._arena = self._steps.solo_step(
+                        self._step_params(),
+                        jnp.asarray(toks[s0:s0 + 1]), cache_in,
+                        np.int32(s0), jnp.asarray(start[s0:s0 + 1]),
+                        jnp.asarray(n_new[s0:s0 + 1]))
+                    nxt_dev = jnp.argmax(logits, axis=-1)   # [1, C]
+                    jax.block_until_ready(nxt_dev)
+                    row = np.asarray(nxt_dev)
+                    nxt = np.zeros((self.slots, c_len), row.dtype)
+                    nxt[s0] = row[0]
+                    self.stats.solo_rounds += 1
+                else:
+                    logits, self._arena = self._steps.step(
+                        self._step_params(), jnp.asarray(toks), cache_in,
+                        jnp.asarray(start), jnp.asarray(n_new))
+                    nxt_dev = jnp.argmax(logits, axis=-1)   # [B, C]
+                    jax.block_until_ready(nxt_dev)
+                    nxt = np.asarray(nxt_dev)
             if act_dec:
                 self.stats.decode_steps += 1
 
@@ -769,6 +900,14 @@ class ServeEngine:
         ops.inc(s.device_tables_rebuilds, op="tables_rebuild")
         ops.inc(s.cow_copies, op="cow")
         ops.inc(s.cache_evictions, op="cache_evict")
+        ops.inc(s.page_op_flushes, op="fused_flush")
+        reg.counter(
+            "serve_page_op_round_trips_saved_total",
+            "device dispatches avoided by fused page-op batching"
+        ).inc(s.page_op_round_trips_saved)
+        reg.counter("serve_solo_rounds_total",
+                    "rounds run through the B=1 solo-lane step"
+                    ).inc(s.solo_rounds)
         pool = self._pool
         if pool is not None:
             reg.gauge("serve_pages_used",

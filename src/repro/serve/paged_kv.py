@@ -97,6 +97,10 @@ class PagedKVPool:
         self.adopt_calls = 0
         self.tables_rebuilds = 0
         self._tbl_cache = None       # (key, device array) — see below
+        # set on every block-table mutation, cleared by the engine after
+        # it pushes the tables to the device (the fused apply_page_ops
+        # flush) — pure decode rounds skip the rebuild entirely
+        self.tables_dirty = True
 
     # ---- allocation ----------------------------------------------------
     @property
@@ -172,6 +176,7 @@ class PagedKVPool:
         if need - have > len(self.free):
             return None
         fresh = [self._pop_free() for _ in range(need - have)]
+        self.tables_dirty = True
         for j, pid in enumerate(fresh, start=have):
             self.slot_pages[slot].append(pid)
             self.block_tables[slot, j] = pid
@@ -187,6 +192,7 @@ class PagedKVPool:
             raise PageAccountingError(
                 f"adopt into non-empty slot {slot}")
         self.adopt_calls += 1
+        self.tables_dirty = True
         for j, pid in enumerate(page_ids):
             if pid == 0:
                 raise PageAccountingError(
@@ -213,6 +219,7 @@ class PagedKVPool:
         if not self.free:
             return False
         dst = self._pop_free()
+        self.tables_dirty = True
         self.slot_pages[slot][j] = dst
         self.block_tables[slot, j] = dst
         self.ref[pid] -= 1          # shared copy stays live elsewhere
@@ -228,6 +235,7 @@ class PagedKVPool:
             n += bool(self.release(pid))
         self.slot_pages[slot] = []
         self.block_tables[slot, :] = 0
+        self.tables_dirty = True
         return n
 
     def device_tables(self, n_groups: int) -> jax.Array:

@@ -35,6 +35,29 @@ The unified step contract
   at admission (``None`` for attention-only stacks); ``page_copy`` is
   the device half of ``PagedKVPool.cow``.
 
+  **Batched page-ops** — ``apply_page_ops(arena, copy_src [S],
+  copy_dst [S], table_updates [S, P], reset_mask [S])`` coalesces ALL of
+  a round's page maintenance into one jitted call: every COW page copy
+  (vectors padded with 0 -> 0 null-page self-copies, which are no-ops),
+  the device block-table rebuild (broadcast into every group's
+  ``block_tbl`` leaf), and the admission SSM/conv state resets (masked
+  zeroing). The engine queues copies/resets host-side during admit and
+  flushes once before the step — and skips the call entirely on rounds
+  where nothing changed (pure decode), so the admit path's serialized
+  per-seat device round-trips collapse to at most one per round.
+  ``page_copy``/``reset_state`` remain as the single-op forms.
+
+  **Solo-lane fast path** — ``solo_step(params, tokens [1, C], arena,
+  slot, start [1], n_new [1])`` runs a round with exactly one live lane
+  at batch width 1: the slot's ``block_tbl``/SSM/conv rows are
+  dynamic-sliced out of the arena inside the jit, the unified step body
+  runs at ``B = 1``, and the recurrent rows are scattered back (page
+  leaves are global and pass through). ``slot`` is a traced scalar, so
+  one compile per width C serves every slot. This is what keeps a
+  prefix-cache leader prefill (one miss in flight, ``max_slots - 1``
+  idle lanes) from paying the full batch width in dead compute.
+  Single-device engines only; mesh engines keep the batched step.
+
 Sharding contract (what shards, what replicates)
 ------------------------------------------------
   * **Weights** — ``launch/sharding.py`` rules: TP dims on ``model``,
@@ -306,6 +329,12 @@ class PagedServeSteps:
           (logits [B,C,V], arena)      (compiles once per C in {1, chunk})
       page_copy(arena, src, dst) -> arena
       reset_state(arena, slot) -> arena    (None for attention-only cfgs)
+      apply_page_ops(arena, copy_src [S], copy_dst [S],
+                     table_updates [S,P], reset_mask [S]) -> arena
+          (one fused call per round: COW copies + table rebuild + resets)
+      solo_step(params, tokens [1,C], arena, slot, start [1], n_new [1])
+          -> (logits [1,C,V], arena)   (single-live-lane rounds at B=1;
+          None under a mesh — compiles once per C, slot is traced)
     """
     cfg: ModelConfig
     mesh: Optional[object]
@@ -318,6 +347,8 @@ class PagedServeSteps:
     step: Callable
     page_copy: Callable
     reset_state: Optional[Callable] = None
+    apply_page_ops: Optional[Callable] = None
+    solo_step: Optional[Callable] = None
     paged_attention: bool = False    # attention via the ragged Pallas kernel
 
     def compatible_with(self, *, page, n_pages, max_slots,
@@ -336,12 +367,33 @@ class PagedServeSteps:
         a run to attribute compile time in ``EngineStats``."""
         calls = compiles = 0
         seconds = 0.0
-        for fn in (self.step, self.page_copy, self.reset_state):
+        for fn in (self.step, self.page_copy, self.reset_state,
+                   self.apply_page_ops, self.solo_step):
             if isinstance(fn, TracedJit):
                 calls += fn.calls
                 compiles += fn.compiles
                 seconds += fn.compile_seconds
         return calls, compiles, seconds
+
+
+def width_ladder(chunk: int) -> tuple:
+    """Compiled ``C > 1`` step widths: pow2 rungs from 8 up to ``chunk``.
+
+    A short prefill chunk — a cached-prefix suffix, a prompt tail —
+    runs at the smallest rung that covers it instead of the full chunk:
+    device time scales with the padded width, so the prefix cache's
+    saved tokens only turn into saved wall clock if the step width
+    shrinks with them. The rung floor (8) and pow2 spacing bound the
+    compile surface to log2(chunk/8) + 2 shapes per engine geometry
+    (lru-shared across engines), so this stays a ladder, not a zoo."""
+    if chunk <= 1:
+        return ()
+    w, out = 8, []
+    while w < chunk:
+        out.append(w)
+        w *= 2
+    out.append(chunk)
+    return tuple(out)
 
 
 def default_chunk(max_pages_per_seq: int, page: int) -> int:
@@ -417,12 +469,12 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     """
     if chunk is None:
         chunk = default_chunk(max_pages_per_seq, page)
-    # one engine drives exactly two step widths (C = 1 and C = chunk; one
-    # when they coincide) and a single shape through page_copy/reset —
-    # that is each wrapper's declared compile surface
-    step_shapes = 2 if chunk > 1 else 1
+    # one engine drives the decode width (C = 1) plus the pow2 prefill
+    # width ladder (``width_ladder``) and a single shape through
+    # page_copy/reset — that is each wrapper's declared compile surface
+    step_shapes = len(width_ladder(chunk)) + 1
     if mesh is None:
-        step, page_copy, reset = _single_device_steps(
+        step, page_copy, reset, apply_ops, solo = _single_device_steps(
             cfg, page, n_pages, max_slots, max_pages_per_seq,
             cache_dtype, chunk, paged_attention)
         return PagedServeSteps(
@@ -434,7 +486,10 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
                            cost_key=_step_cost_key),
             page_copy=TracedJit("page_copy", page_copy, 1),
             reset_state=(None if reset is None
-                         else TracedJit("reset_state", reset, 1)))
+                         else TracedJit("reset_state", reset, 1)),
+            apply_page_ops=TracedJit("apply_page_ops", apply_ops, 1),
+            solo_step=TracedJit("solo_step", solo, step_shapes,
+                                cost_key=_step_cost_key))
 
     if params_struct is None:
         raise ValueError("sharded step builders need params_struct to "
@@ -481,7 +536,13 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
             jax.jit(_page_copy_body(cfg),
                     in_shardings=(a_sh, rep, rep),
                     out_shardings=a_sh, **_donate((0,))), 1),
-        reset_state=reset)
+        reset_state=reset,
+        apply_page_ops=TracedJit(
+            "apply_page_ops",
+            jax.jit(_apply_page_ops_body(cfg),
+                    in_shardings=(a_sh, rep, rep, rep, rep),
+                    out_shardings=a_sh, **_donate((0,))), 1),
+        solo_step=None)
 
 
 def _logits_bcv(mesh, batch: int, cfg) -> NamedSharding:
@@ -545,6 +606,102 @@ def _page_copy_body(cfg: ModelConfig):
     return _copy
 
 
+def _apply_page_ops_body(cfg: ModelConfig):
+    """(arena, copy_src [S], copy_dst [S], table_updates [S, P],
+    reset_mask [S]) -> arena: one round's page maintenance, fused.
+
+    Copy vectors are padded with 0 -> 0 null-page self-copies (real COW
+    destinations are freshly allocated and distinct, so duplicate-index
+    scatter writes only ever collide on the identity no-op).
+    ``table_updates`` is the host block table, broadcast into every
+    group's ``block_tbl`` leaf; ``reset_mask`` zeroes freshly admitted
+    slots' dense SSM/conv rows."""
+
+    def _apply(arena, copy_src, copy_dst, tables, reset_mask):
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                for name, leaf in attn.items():
+                    if name.endswith("_pages"):
+                        attn[name] = leaf.at[:, copy_dst].set(
+                            leaf[:, copy_src])
+                g = attn["block_tbl"].shape[0]
+                attn["block_tbl"] = jnp.broadcast_to(
+                    tables.astype(jnp.int32)[None],
+                    (g,) + tables.shape)
+                grp["attn"] = attn
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                for name in ("ssm", "conv"):
+                    leaf = mm[name]
+                    mask = reset_mask.reshape(
+                        (1, -1) + (1,) * (leaf.ndim - 2))
+                    mm[name] = jnp.where(mask, jnp.zeros((), leaf.dtype),
+                                         leaf)
+                grp["mamba"] = mm
+            out[key] = grp
+        return out
+
+    return _apply
+
+
+def _solo_step_body(cfg: ModelConfig, paged_attention: bool):
+    """Single-live-lane round at batch width 1 (see module docstring).
+
+    The slot's per-slot rows (``block_tbl``, SSM, conv) are dynamic-
+    sliced into a B=1 view, the unified step body runs on the view, and
+    the recurrent rows scatter back; page leaves are global, so the
+    step's K/V writes land in the real arena pages directly. The block
+    table is read-only inside the step, so the full-width original is
+    kept on the way out."""
+    step = _step_body(cfg, paged_attention)
+
+    def solo(params, tokens, arena, slot, start, n_new):
+        view = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                attn["block_tbl"] = jax.lax.dynamic_slice_in_dim(
+                    attn["block_tbl"], slot, 1, axis=1)
+                grp["attn"] = attn
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                mm["ssm"] = jax.lax.dynamic_slice_in_dim(
+                    mm["ssm"], slot, 1, axis=1)
+                mm["conv"] = jax.lax.dynamic_slice_in_dim(
+                    mm["conv"], slot, 1, axis=1)
+                grp["mamba"] = mm
+            view[key] = grp
+        logits, stepped = step(params, tokens, view, start, n_new)
+        out = {}
+        for i, kind in enumerate(cfg.pattern):
+            key = f"b{i}"
+            grp = dict(arena[key])
+            sg = stepped[key]
+            if "attn" in grp:
+                attn = dict(grp["attn"])
+                for name, leaf in sg["attn"].items():
+                    if name.endswith("_pages"):
+                        attn[name] = leaf
+                grp["attn"] = attn
+            if "mamba" in grp:
+                mm = dict(grp["mamba"])
+                mm["ssm"] = jax.lax.dynamic_update_slice_in_dim(
+                    mm["ssm"], sg["mamba"]["ssm"], slot, axis=1)
+                mm["conv"] = jax.lax.dynamic_update_slice_in_dim(
+                    mm["conv"], sg["mamba"]["conv"], slot, axis=1)
+                grp["mamba"] = mm
+            out[key] = grp
+        return logits, out
+
+    return solo
+
+
 def _reset_state_body(cfg: ModelConfig):
     """(arena, slot) -> arena with the slot's dense SSM/conv rows zeroed.
 
@@ -580,7 +737,9 @@ def _single_device_steps(cfg: ModelConfig, page: int, n_pages: int,
     reuse a jit traced for a different configuration."""
     step = jax.jit(_step_body(cfg, paged_attention))
     page_copy = jax.jit(_page_copy_body(cfg))
+    apply_ops = jax.jit(_apply_page_ops_body(cfg))
+    solo = jax.jit(_solo_step_body(cfg, paged_attention))
     reset = None
     if any(k == "mamba" or k.startswith("hybrid") for k in cfg.pattern):
         reset = jax.jit(_reset_state_body(cfg))
-    return step, page_copy, reset
+    return step, page_copy, reset, apply_ops, solo

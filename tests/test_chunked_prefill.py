@@ -261,11 +261,14 @@ def test_chunk_size_invariance_through_kernel(params):
 
 
 # -------------------------------------------------------------------------
-# step-shape bound: the compile surface is {1, chunk}, not a bucket zoo
+# step-shape bound: the compile surface is {1} + the pow2 width ladder
+# (steps.width_ladder), never an unbounded bucket zoo
 # -------------------------------------------------------------------------
-def test_step_widths_bounded_to_two_shapes(params, monkeypatch):
+def test_step_widths_bounded_to_ladder(params, monkeypatch):
+    from repro.serve import steps as serve_steps
+    chunk = 2 * PAGE
     eng = ServeEngine(CFG, params, slots=4, max_len=64, page_size=PAGE,
-                      chunk_tokens=2 * PAGE)
+                      chunk_tokens=chunk)
     eng._ensure_pool()
     widths = set()
     real_step = eng._steps.step
@@ -276,8 +279,12 @@ def test_step_widths_bounded_to_two_shapes(params, monkeypatch):
 
     object.__setattr__(eng._steps, "step", spy)
     eng.run(_reqs(n=8, lo=4, hi=30, max_new=4, seed=37))
-    assert widths <= {1, 2 * PAGE}, widths
-    assert len(widths) == 2                        # both shapes exercised
+    ladder = serve_steps.width_ladder(chunk)
+    assert widths <= {1} | set(ladder), widths
+    # decode and the full-chunk rung are both exercised; narrower rungs
+    # appear only when a round's widest grant fits one (sub-chunk
+    # tails no longer pad all the way up to chunk)
+    assert {1, chunk} <= widths, widths
 
 
 # -------------------------------------------------------------------------

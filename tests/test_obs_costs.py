@@ -247,8 +247,10 @@ def test_engine_run_attributes_costs(serve_cfg, serve_params, capture):
     eng.run(_reqs())
     rep = eng.last_cost_report
     assert rep is not None
-    step_rows = [r for r in rep.fns if r.fn == "step"]
+    step_rows = [r for r in rep.fns if r.fn in ("step", "solo_step")]
     assert step_rows and all(r.key.startswith("C") for r in step_rows)
+    # every round reaches the device through exactly one step dispatch —
+    # the batch step or the B=1 solo lane
     assert sum(r.calls for r in step_rows) == eng.stats.rounds
     assert rep.tokens_out == eng.stats.tokens_out
     assert rep.measured_wall_s > 0
@@ -295,12 +297,17 @@ def test_cost_counter_track_via_default_tracer(serve_cfg, serve_params,
         eng.run(_reqs())
     finally:
         obs_trace.set_tracer(prev)
-    cost_tracks = [e for e in trc.events
-                   if e["ph"] == "C" and e["name"] == "cost/step"]
-    rows = [r for r in eng.last_cost_report.fns if r.fn == "step"]
+    # solo-lane rounds emit on their own cost/solo_step track; every
+    # round lands on exactly one of the two
+    cost_tracks = [e for e in trc.events if e["ph"] == "C"
+                   and e["name"] in ("cost/step", "cost/solo_step")]
+    rows = [r for r in eng.last_cost_report.fns
+            if r.fn in ("step", "solo_step")]
     if any(r.captured for r in rows):      # backend exposes a cost model
         assert len(cost_tracks) == eng.stats.rounds
-        cum = [e["args"]["bytes"] for e in cost_tracks]
-        assert cum == sorted(cum)          # cumulative, monotonic
+        for name in ("cost/step", "cost/solo_step"):
+            cum = [e["args"]["bytes"] for e in cost_tracks
+                   if e["name"] == name]
+            assert cum == sorted(cum)      # cumulative, monotonic
     else:
         assert cost_tracks == []           # zero-cost rows emit no track

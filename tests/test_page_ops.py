@@ -1,0 +1,170 @@
+"""Batched page-ops, the solo-lane step and the serving weight plan
+(`serve/engine.py` + `serve/steps.py:apply_page_ops`/`solo_step`).
+
+The engine queues every COW copy / state reset / table update of a round
+host-side and flushes them in ONE fused jit dispatch before the step.
+These tests pin the contract: the fused path is token-identical to the
+legacy one-dispatch-per-op path, strictly cheaper in host↔device round
+trips, and conserves page refcounts (every live page's refcount equals
+its slot mappings plus its prefix-cache hold; free pages are refcount 0).
+Same file covers the B=1 solo-lane fast path and the one-time weight
+execution plan (`core.serving_quant.build_exec_weights`) — both new ways
+a round can reach the device, both required to be greedy-token-exact."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.qconfig import QMCConfig
+from repro.core.serving_quant import quantize_for_serving
+from repro.serve import steps as serve_steps
+from repro.serve.engine import Request, ServeEngine
+
+PAGE = 8
+SLOTS = 4
+MAX_LEN = 48
+
+
+def _reqs(n=6, sys_len=24, max_new=5, seed=3, vocab=64):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(2, vocab, sys_len)
+    return [Request(uid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, vocab, int(u))]).astype(np.int32),
+                    max_new_tokens=max_new)
+            for i, u in enumerate(rng.integers(4, 12, size=n))]
+
+
+def _engine(cfg, params, *, step_set=None, **kw):
+    return ServeEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                       page_size=PAGE, step_set=step_set, **kw)
+
+
+def _legacy_steps(cfg):
+    """The same step set the engine would build, with the fused flush and
+    the solo lane stripped — forcing the one-dispatch-per-op path."""
+    full = serve_steps.build_paged_steps(
+        cfg, page=PAGE, n_pages=serve_steps.default_n_pages(
+            SLOTS, MAX_LEN // PAGE),
+        max_slots=SLOTS, max_pages_per_seq=MAX_LEN // PAGE)
+    return dataclasses.replace(full, apply_page_ops=None, solo_step=None)
+
+
+def _check_refcounts(eng):
+    pool = eng._pool
+    pool.check_tables()
+    held = set()
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check_invariants()
+        held = set(eng.prefix_cache._nodes)
+    mapped = {}
+    for pages in pool.slot_pages:
+        for pid in pages:
+            mapped[pid] = mapped.get(pid, 0) + 1
+    for pid in range(1, pool.n_pages + 1):
+        want = mapped.get(pid, 0) + (1 if pid in held else 0)
+        assert pool.ref[pid] == want, \
+            f"page {pid}: refcount {pool.ref[pid]} != " \
+            f"{mapped.get(pid, 0)} mappings + {pid in held} cache hold"
+        assert (pid in pool._free_set) == (want == 0)
+
+
+def test_fused_page_ops_token_parity_and_fewer_round_trips(
+        serve_cfg, serve_params):
+    """Fused vs sequential page-ops on the shared-prefix workload:
+    identical tokens, fewer device table rebuilds, refcounts conserved
+    on both engines."""
+    fused = _engine(serve_cfg, serve_params, prefix_cache=True)
+    out_f = fused.run(_reqs())
+    legacy = _engine(serve_cfg, serve_params, prefix_cache=True,
+                     step_set=_legacy_steps(serve_cfg))
+    out_l = legacy.run(_reqs())
+
+    assert [r.out_tokens for r in out_f] == [r.out_tokens for r in out_l]
+    assert fused.stats.page_op_flushes > 0
+    assert legacy.stats.page_op_flushes == 0
+    # the fused engine uploads tables only on mutation rounds; the
+    # legacy path re-installs per admission event
+    assert fused.stats.device_tables_rebuilds <= \
+        legacy.stats.device_tables_rebuilds
+    assert fused.stats.cache_hits > 0
+    _check_refcounts(fused)
+    _check_refcounts(legacy)
+
+
+def test_fused_flush_batches_cow_copies(serve_cfg, serve_params):
+    """A fully-cached prompt restarts mid-page (the last prompt token
+    must be recomputed for its logit), writing into a shared page — the
+    COW copy must ride the fused flush, not its own dispatch, and end
+    with conserved refcounts."""
+    rng = np.random.default_rng(11)
+    base = rng.integers(2, 64, 16).astype(np.int32)   # 2 full pages of 8
+    eng = _engine(serve_cfg, serve_params, prefix_cache=True)
+    eng.run([Request(uid=0, prompt=base, max_new_tokens=4)])
+    eng.run([Request(uid=1, prompt=base.copy(), max_new_tokens=4)])
+    s = eng.stats
+    assert s.cow_copies > 0
+    assert s.page_copy_calls == s.cow_copies
+    # every queued op was absorbed by a fused flush: ops batched counts
+    # copies + resets + one table rebuild per flush, and no flush ran
+    # without work or a dirty table
+    assert s.page_ops_batched >= s.page_op_flushes + s.cow_copies
+    _check_refcounts(eng)
+
+
+def test_solo_step_parity(serve_cfg, serve_params):
+    """A single in-flight request decodes through the B=1 solo lane —
+    token-identical to the full-width batch step."""
+    prompt = np.arange(2, 12, dtype=np.int32)
+    solo = _engine(serve_cfg, serve_params)
+    out_s = solo.run([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+    batch = _engine(serve_cfg, serve_params,
+                    step_set=_legacy_steps(serve_cfg))
+    out_b = batch.run([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+    assert out_s[0].out_tokens == out_b[0].out_tokens
+    assert solo.stats.solo_rounds > 0
+    assert batch.stats.solo_rounds == 0
+
+
+def test_weight_plan_parity(serve_cfg, serve_params):
+    """The one-time exec-weight lowering is greedy-token-identical to
+    per-call stream compute, and a dense tree passes through untouched."""
+    from repro.core.qtensor import QTensor
+    from repro.core.qtensor_sharded import ShardedQTensor
+    qparams = quantize_for_serving(
+        serve_params, QMCConfig(rho=0.3, granularity="subtile"),
+        tp_shards=1, min_dim=64)
+    q_leaves = [l for l in jax.tree_util.tree_leaves(
+        qparams, is_leaf=lambda x: isinstance(
+            x, (QTensor, ShardedQTensor)))
+        if isinstance(l, (QTensor, ShardedQTensor))]
+    assert q_leaves, "config too small to quantize — test is vacuous"
+
+    planned = _engine(serve_cfg, qparams)
+    out_p = planned.run(_reqs())
+    streamed = _engine(serve_cfg, qparams, weight_plan=False)
+    out_s = streamed.run(_reqs())
+    assert [r.out_tokens for r in out_p] == [r.out_tokens for r in out_s]
+    # the plan lowered every stream leaf; dense engines pay nothing
+    assert planned._exec_params is not None
+    assert not any(isinstance(l, (QTensor, ShardedQTensor))
+                   for l in jax.tree_util.tree_leaves(
+                       planned._exec_params,
+                       is_leaf=lambda x: isinstance(
+                           x, (QTensor, ShardedQTensor))))
+    dense = _engine(serve_cfg, serve_params)
+    assert dense._exec_params is serve_params
+
+
+def test_pure_decode_rounds_skip_flush(serve_cfg, serve_params):
+    """Rounds that neither allocated, COWed, nor reset anything must not
+    dispatch apply_page_ops at all: flush count stays well below round
+    count on a decode-heavy run."""
+    eng = _engine(serve_cfg, serve_params)
+    eng.run([Request(uid=i, prompt=np.arange(2, 8, dtype=np.int32),
+                     max_new_tokens=8) for i in range(3)])
+    s = eng.stats
+    assert s.page_op_flushes < s.rounds
+    assert s.rounds > 4
