@@ -38,6 +38,7 @@ from repro.obs import trace as obs_trace
 from repro.serve import steps as serve_steps
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.paged_kv import pages_for
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -52,6 +53,22 @@ def main():
     ap.add_argument("--weights", choices=["fp16", "qmc"], default="qmc")
     ap.add_argument("--rho", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax, the "
+                         "bitwise oracle path)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k highest-logit tokens "
+                         "(0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling: smallest token set with "
+                         "cumulative mass >= p (1.0 = off)")
+    ap.add_argument("--logprobs", action="store_true",
+                    help="record each selected token's model logprob in "
+                         "Request.out_logprobs")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="self-speculative decode: up to K prompt-lookup "
+                         "draft tokens verified per greedy decode lane "
+                         "per round (0 = off)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV pages copy-on-write")
     ap.add_argument("--paged-attention", action="store_true",
@@ -150,11 +167,15 @@ def main():
         # install as the process default so deep call sites (scheduler,
         # prefix cache, jit wrappers) emit into the same trace
         obs_trace.set_tracer(tracer)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p, seed=args.seed,
+                        logprobs=args.logprobs)
     eng = ServeEngine(cfg, params, slots=args.slots, max_len=max_len,
                       page_size=args.page_size, mesh=mesh,
                       step_set=step_set, chunk_tokens=chunk,
                       prefix_cache=args.prefix_cache,
                       paged_attention=args.paged_attention,
+                      sampling=sp, speculative_k=args.speculative,
                       tracer=tracer)
     if args.profile:
         with jax.profiler.trace(args.profile):
@@ -196,6 +217,18 @@ def main():
     if s.dedup_hits:
         print(f"[serve] in-flight dedup: {s.dedup_hits} admissions "
               f"aliased a live identical prompt")
+    if args.temperature > 0:
+        print(f"[serve] sampling: temperature={args.temperature} "
+              f"top_k={args.top_k} top_p={args.top_p} seed={args.seed}")
+    if args.speculative > 0:
+        print(f"[serve] speculative k={args.speculative}: "
+              f"{s.spec_rounds} verify rounds, "
+              f"{s.spec_accepted_tokens}/{s.spec_draft_tokens} drafts "
+              f"accepted (rate={s.spec_acceptance_rate:.2f})")
+    if args.logprobs and reqs and reqs[0].out_logprobs:
+        lp = reqs[0].out_logprobs[:5]
+        print(f"[serve] req 0 logprobs: "
+              f"{[round(x, 3) for x in lp]}...")
     if args.cost_report and eng.last_cost_report is not None:
         print("[serve] cost attribution (measured vs roofline, "
               "obs/costs.py):")

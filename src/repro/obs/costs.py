@@ -28,6 +28,14 @@ the ``cost/<fn>`` Perfetto counter tracks TracedJit emits per call.
 Wired end to end by ``launch/serve.py --cost-report`` and the
 ``cost_attribution`` section of ``benchmarks/serving.py``.
 
+Sampling and speculative verification need no rows of their own: token
+selection is fused INTO the step (``serve/sampling.py`` — its FLOPs land
+in the step's per-width cost, and no out-of-jit argmax dispatch exists
+to go unattributed any more), and a speculative verify call is just the
+step at a ``width_ladder`` rung, so it lands in that rung's ``C<width>``
+row. The invariant the regression tests pin: one engine round == exactly
+one attributed ``step``/``solo_step`` dispatch.
+
 Capture is OFF by default: the only cost any other path pays is one
 module-bool branch per traced call. Turning it on makes each TracedJit
 call synchronous (``block_until_ready`` inside the timed window) so the

@@ -19,6 +19,18 @@ scatters the same K/V values a one-shot contiguous prefill computes (int8
 caches share one quantizer, ``models.kvcache.quantize_kv``), causal
 attention makes each query's output independent of how the prompt was
 chunked, and masked pages contribute exp(-1e30) = 0 to the softmax.
+
+Token selection is FUSED into the jitted step (``serve/sampling.py``):
+the paged engine's rounds move ``[B, C]`` selected token ids (+ per-token
+logprobs) across the jit boundary, never the raw ``[B, C, V]`` logits.
+Per-request :class:`~repro.serve.sampling.SamplingParams` ride on
+``Request.sampling`` (engine-wide default via the ``sampling=`` ctor
+arg); greedy — the default — takes the bitwise argmax oracle path.
+``speculative_k > 0`` adds self-speculative greedy decode: a prompt-
+lookup draft proposes up to k tokens per decode lane and ONE verify call
+on an already-compiled ``width_ladder`` rung accepts a prefix
+(``serve/speculative.py``); rejected positions roll back through
+``PagedKVPool.trim`` and the fused page-op queue.
 """
 from __future__ import annotations
 
@@ -36,9 +48,12 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.models.config import ModelConfig
 from repro.models.model import prefill
+from repro.serve import sampling as samplib
+from repro.serve import speculative
 from repro.serve import steps as serve_steps
 from repro.serve.paged_kv import PagedKVPool, PoolExhausted, pages_for
 from repro.serve.prefix_cache import PrefixCache
+from repro.serve.sampling import SamplingParams
 from repro.serve.scheduler import (FifoScheduler, SchedulerConfig,
                                    bucket_len)
 
@@ -51,6 +66,13 @@ class Request:
     eos_id: Optional[int] = None
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # token-selection policy; None -> the engine default (greedy unless
+    # the engine was built with sampling=...)
+    sampling: Optional[SamplingParams] = None
+    # selected-token model logprobs, parallel to out_tokens — filled
+    # only when the effective SamplingParams has logprobs=True (cleared
+    # with out_tokens on preemption recompute)
+    out_logprobs: List[float] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -111,6 +133,12 @@ class EngineStats:
     page_ops_batched: int = 0
     # rounds run through the B=1 solo-lane step (exactly one live lane)
     solo_rounds: int = 0
+    # self-speculative decode: rounds that carried a verify lane, draft
+    # tokens proposed, and draft tokens the model accepted (the bonus
+    # emissions beyond what plain decode would have produced)
+    spec_rounds: int = 0
+    spec_draft_tokens: int = 0
+    spec_accepted_tokens: int = 0
     # serving-jit compiles observed during this run (TracedJit deltas
     # over the step set — nonzero on a warm engine means an unexpected
     # retrace) and the wall seconds those compiling calls took
@@ -131,6 +159,12 @@ class EngineStats:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def spec_acceptance_rate(self) -> float:
+        """Fraction of proposed draft tokens the model accepted."""
+        return (self.spec_accepted_tokens / self.spec_draft_tokens
+                if self.spec_draft_tokens else 0.0)
 
     @property
     def page_op_round_trips_saved(self) -> int:
@@ -274,6 +308,19 @@ class ServeEngine:
     full-width batch (``EngineStats.solo_rounds``), which is what keeps
     a cache-miss leader prefill from paying ``slots``-wide dead compute.
 
+    ``sampling`` sets the engine-default
+    :class:`~repro.serve.sampling.SamplingParams` (greedy when omitted;
+    per-request ``Request.sampling`` overrides). ``speculative_k > 0``
+    turns on self-speculative greedy decode: each greedy decode lane may
+    propose up to k prompt-lookup draft tokens per round
+    (``serve/speculative.py``) and verify them in ONE step call on the
+    smallest ``width_ladder`` rung covering ``1 + k`` — zero new
+    compiled shapes; draft tokens draw on the round's prefill budget
+    (``FifoScheduler.grant_verify``); rejected positions return their
+    tail pages via ``PagedKVPool.trim``. Attention-only stacks only
+    (SSM state cannot roll back), and sampled (``temperature > 0``)
+    lanes always decode one token at a time.
+
     ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
     sharded: the arena's page axis over ``data``, attention heads / TP
     weight dims (including ShardedQTensor stream stacks) over ``model``.
@@ -302,6 +349,8 @@ class ServeEngine:
                  inflight_dedup: Optional[bool] = None,
                  paged_attention: bool = False,
                  weight_plan: bool = True,
+                 sampling: Optional[SamplingParams] = None,
+                 speculative_k: int = 0,
                  tracer: Optional[obs_trace.Tracer] = None,
                  metrics: Optional[obs_metrics.Registry] = None):
         if cfg.is_encdec or cfg.n_vis_tokens:
@@ -314,6 +363,12 @@ class ServeEngine:
                 "prefix caching / in-flight dedup share attention KV "
                 "pages; SSM/conv state is not page-addressable — disable "
                 f"them for hybrid/mamba stacks (pattern={cfg.pattern})")
+        if speculative_k > 0 and not attn_only:
+            raise NotImplementedError(
+                "self-speculative decode rolls rejected positions back "
+                "via valid_len masking + page trim; SSM/conv state has "
+                "no per-position rollback — attention-only stacks only "
+                f"(pattern={cfg.pattern})")
         self.cfg = cfg
         self.mesh = mesh
         if mesh is not None:
@@ -338,6 +393,14 @@ class ServeEngine:
         self.paged_attention = paged_attention
         self._tracer = tracer          # None -> process default at run()
         self._metrics = metrics
+        # token selection: the engine-wide default policy (per-request
+        # Request.sampling overrides), host-side per-lane param tables
+        # the step's traced sampling pytree is built from, and the max
+        # draft length per verify round (0 = speculative decode off)
+        self._default_sp = sampling or samplib.GREEDY
+        self._samp = samplib.lane_inputs(slots)
+        self._slot_sp: List[SamplingParams] = [samplib.GREEDY] * slots
+        self._spec_k = int(speculative_k)
         self._dedup = attn_only if inflight_dedup is None \
             else inflight_dedup
         # co-scheduling a 1-token decode into a C-wide step is bitwise
@@ -486,18 +549,33 @@ class ServeEngine:
             on_token=None) -> List[Request]:
         """Process all requests to completion; returns them with outputs.
 
+        Token selection follows each request's
+        :class:`~repro.serve.sampling.SamplingParams` (``Request.
+        sampling``; the engine's ``sampling=`` default otherwise, greedy
+        out of the box) — the ``greedy`` flag is kept for API
+        compatibility and no longer gates anything. With
+        ``logprobs=True`` the selected token's model logprob lands in
+        ``request.out_logprobs``, parallel to ``out_tokens`` (read
+        ``request.out_logprobs[-1]`` inside ``on_token`` to stream it).
+
+        **EOS contract** (greedy, sampled and speculative paths agree):
+        a generated ``eos_id`` IS emitted — appended to ``out_tokens``,
+        streamed through ``on_token``, counted in ``tokens_out`` — and
+        generation stops immediately after; speculative acceptance
+        truncates at the first EOS, so no tokens ever follow it.
+
         ``on_token(slot, token, request)`` — when given — streams every
         emitted token: once in the round a request's last prefill chunk
         produces its first token (slot is -1 if the request finished at
-        prefill without ever decoding) and once per active decode lane
-        after each jitted round. A preempted request re-streams from its
+        prefill without ever decoding) and once per accepted token per
+        active decode lane after each jitted round (a verify round can
+        emit several). A preempted request re-streams from its
         first token when recomputed; consumers that must not see
         duplicates should key on ``request.uid`` and truncate.
 
         Stats describe this run only (a fresh EngineStats per call); the
         prefix cache and its pages persist across calls."""
-        if not greedy:
-            raise NotImplementedError("only greedy decoding is implemented")
+        del greedy                     # per-request SamplingParams rule
         self.stats = EngineStats()
         t0 = time.monotonic()
         for r in requests:
@@ -589,6 +667,7 @@ class ServeEngine:
             # discarded emissions must not contribute inter-token gaps
             self.stats.emit_times.pop(req.uid, None)
             req.out_tokens = []
+            req.out_logprobs = []
             active[victim] = None
             pool.free_slot(victim)
             sched.on_preempt(victim)
@@ -624,6 +703,10 @@ class ServeEngine:
                 self._pending_resets.append(s)
             active[s] = req
             pos[s] = start
+            sp = req.sampling if req.sampling is not None \
+                else self._default_sp
+            self._slot_sp[s] = sp
+            samplib.set_lane(self._samp, s, sp, req.uid)
             sched.on_admit(s)
             sched.note_progress(s, start)
             if adm.cached_pages:
@@ -721,14 +804,49 @@ class ServeEngine:
                                 and not prefilling(s)]
                 run_decode = bool(decode_lanes) and (self._co_schedule
                                                      or not plan)
+                # self-speculative decode: draft up to k tokens per
+                # greedy decode lane (prompt-lookup over its own
+                # history) for a single verify step on an existing
+                # ladder rung. Drafts are optional work: they draw on
+                # the round budget after prefill grants and take extra
+                # pages WITHOUT preemption — any shortfall just means
+                # the lane decodes one token as usual
+                verify: Dict[int, np.ndarray] = {}
+                if run_decode and self._spec_k > 0:
+                    for s in decode_lanes:
+                        req = active[s]
+                        if self._slot_sp[s].temperature > 0:
+                            continue   # greedy acceptance only
+                        want = min(self._spec_k, self.chunk - 1,
+                                   self.max_len - int(pos[s]) - 1,
+                                   req.max_new_tokens
+                                   - len(req.out_tokens) - 1)
+                        if want <= 0:
+                            continue
+                        hist = np.concatenate(
+                            [np.asarray(req.prompt, np.int64),
+                             np.asarray(req.out_tokens, np.int64)])
+                        draft = speculative.propose(hist, want)
+                        if draft.size == 0:
+                            continue
+                        granted = sched.grant_verify(len(draft))
+                        if granted == 0:
+                            continue
+                        draft = draft[:granted]
+                        if self._alloc(
+                                s, int(pos[s]) + 1 + len(draft)) is None:
+                            continue
+                        verify[s] = draft
             if not plan and not run_decode:
                 continue            # everything preempted/idled; re-admit
 
             with phase("round/host_prep"):
-                max_n = max(plan.values(), default=0)
-                # smallest compiled width covering the widest grant
-                # (pow2 ladder — see the class docstring); pure-decode
-                # rounds stay at the dedicated C = 1 shape
+                max_n = max([max(plan.values(), default=0)]
+                            + [1 + len(d) for d in verify.values()])
+                # smallest compiled width covering the widest grant —
+                # prefill chunk or speculative verify (pow2 ladder, see
+                # the class docstring); pure-decode rounds stay at the
+                # dedicated C = 1 shape
                 c_len = 1 if max_n <= 1 else min(
                     [w for w in self._widths if w >= max_n]
                     or [self.chunk])
@@ -745,17 +863,25 @@ class ServeEngine:
                         p0 = int(pos[s])
                         toks[s, :n] = active[s].prompt[p0:p0 + n]
                     elif not prefilling(s) and run_decode:
-                        n_new[s] = 1
+                        d = verify.get(s)
                         toks[s, 0] = next_tok[s]
+                        if d is None:
+                            n_new[s] = 1
+                        else:
+                            n_new[s] = 1 + len(d)
+                            toks[s, 1:1 + len(d)] = d
 
                 ts = time.monotonic()
-                # gather-work accounting: decode lanes attend seq = pos+1
-                # (the token being written included); chunk lanes stream
+                # gather-work accounting: decode lanes attend seq =
+                # pos+n_new (the tokens being written included — n_new
+                # is 1, or 1+k on a verify round); chunk lanes stream
                 # per q block, page-for-page what kv_traffic_chunked
                 # charges
                 act_dec = decode_lanes if run_decode else []
+                if verify:
+                    self.stats.spec_rounds += 1
                 self.stats.kv_pages_live += sum(
-                    pages_for(int(pos[s]) + 1, self.page)
+                    pages_for(int(pos[s]) + int(n_new[s]), self.page)
                     for s in act_dec)
                 self.stats.kv_pages_full += (len(act_dec)
                                              * self.max_pages_per_seq)
@@ -771,26 +897,35 @@ class ServeEngine:
                 solo = (self._steps.solo_step is not None
                         and len(live) == 1)
             with phase("round/device_step"):
+                # token selection runs INSIDE the jit (the sampling-head
+                # epilogue): only [B, C] selected ids + logprobs cross
+                # the boundary, and dead lanes come back as the
+                # DEAD_TOKEN sentinel — never a forgeable vocab id
                 if solo:
                     s0 = int(live[0])
-                    logits, self._arena = self._steps.solo_step(
+                    tok_dev, logp_dev, self._arena = self._steps.solo_step(
                         self._step_params(),
                         jnp.asarray(toks[s0:s0 + 1]), cache_in,
                         np.int32(s0), jnp.asarray(start[s0:s0 + 1]),
-                        jnp.asarray(n_new[s0:s0 + 1]))
-                    nxt_dev = jnp.argmax(logits, axis=-1)   # [1, C]
-                    jax.block_until_ready(nxt_dev)
-                    row = np.asarray(nxt_dev)
-                    nxt = np.zeros((self.slots, c_len), row.dtype)
-                    nxt[s0] = row[0]
+                        jnp.asarray(n_new[s0:s0 + 1]),
+                        {k: jnp.asarray(v[s0:s0 + 1])
+                         for k, v in self._samp.items()})
+                    jax.block_until_ready(tok_dev)
+                    nxt = np.full((self.slots, c_len),
+                                  samplib.DEAD_TOKEN, np.int64)
+                    logp_h = np.zeros((self.slots, c_len), np.float32)
+                    nxt[s0] = np.asarray(tok_dev)[0]
+                    logp_h[s0] = np.asarray(logp_dev)[0]
                     self.stats.solo_rounds += 1
                 else:
-                    logits, self._arena = self._steps.step(
+                    tok_dev, logp_dev, self._arena = self._steps.step(
                         self._step_params(), jnp.asarray(toks), cache_in,
-                        jnp.asarray(start), jnp.asarray(n_new))
-                    nxt_dev = jnp.argmax(logits, axis=-1)   # [B, C]
-                    jax.block_until_ready(nxt_dev)
-                    nxt = np.asarray(nxt_dev)
+                        jnp.asarray(start), jnp.asarray(n_new),
+                        {k: jnp.asarray(v)
+                         for k, v in self._samp.items()})
+                    jax.block_until_ready(tok_dev)
+                    nxt = np.asarray(tok_dev)
+                    logp_h = np.asarray(logp_dev)
             if act_dec:
                 self.stats.decode_steps += 1
 
@@ -817,7 +952,12 @@ class ServeEngine:
                         publish(req, s)
                         sched.miss_closed(s)
                         tok = int(nxt[s, n - 1])
+                        assert tok != samplib.DEAD_TOKEN, \
+                            f"emit read a dead lane (slot {s})"
                         req.out_tokens.append(tok)
+                        if self._slot_sp[s].logprobs:
+                            req.out_logprobs.append(
+                                float(logp_h[s, n - 1]))
                         self.stats.tokens_out += 1
                         emitted += 1
                         if _finished(req, len(req.prompt), self.max_len):
@@ -833,15 +973,48 @@ class ServeEngine:
                             next_tok[s] = tok
                             emit(s, tok, req)
                     elif s in act_dec:
-                        pos[s] += 1
-                        tok = int(nxt[s, 0])
-                        next_tok[s] = tok
-                        req.out_tokens.append(tok)
-                        self.stats.tokens_out += 1
-                        emitted += 1
-                        emit(s, tok, req)
-                        if _finished(req, int(pos[s]), self.max_len):
-                            finish(s)
+                        # plain decode is a verify round with an empty
+                        # draft: accept_greedy keeps the verified draft
+                        # prefix + the model's correction token, and a
+                        # draft-less lane accepts exactly its one token
+                        n = int(n_new[s])
+                        draft = verify.get(s)
+                        if draft is not None:
+                            n_acc = speculative.accept_greedy(
+                                draft, nxt[s, :n])
+                            self.stats.spec_draft_tokens += len(draft)
+                            self.stats.spec_accepted_tokens += n_acc - 1
+                        else:
+                            n_acc = 1
+                        fin = False
+                        for j in range(n_acc):
+                            tok = int(nxt[s, j])
+                            assert tok != samplib.DEAD_TOKEN, \
+                                f"emit read a dead lane (slot {s})"
+                            pos[s] += 1
+                            next_tok[s] = tok
+                            req.out_tokens.append(tok)
+                            if self._slot_sp[s].logprobs:
+                                req.out_logprobs.append(
+                                    float(logp_h[s, j]))
+                            self.stats.tokens_out += 1
+                            emitted += 1
+                            emit(s, tok, req)
+                            if _finished(req, int(pos[s]), self.max_len):
+                                # accepted tokens past EOS (or past the
+                                # budget) are discarded, per the EOS
+                                # contract on run()
+                                finish(s)
+                                fin = True
+                                break
+                        if draft is not None and not fin \
+                                and n_acc < n:
+                            # speculative rollback: tail pages allocated
+                            # for rejected draft positions go back to
+                            # the pool; their garbage K/V stays masked
+                            # by valid_len until real tokens overwrite
+                            # those positions
+                            pool.trim(s, int(pos[s]))
                 self.stats.step_seconds.append(time.monotonic() - ts)
                 self.stats.step_tokens.append(emitted)
             self.stats.rounds += 1
@@ -908,6 +1081,14 @@ class ServeEngine:
         reg.counter("serve_solo_rounds_total",
                     "rounds run through the B=1 solo-lane step"
                     ).inc(s.solo_rounds)
+        reg.counter("serve_speculative_rounds_total",
+                    "rounds that carried a speculative verify lane"
+                    ).inc(s.spec_rounds)
+        spec = reg.counter("serve_speculative_tokens_total",
+                           "speculative draft tokens by outcome",
+                           labels=("kind",))
+        spec.inc(s.spec_draft_tokens, kind="drafted")
+        spec.inc(s.spec_accepted_tokens, kind="accepted")
         pool = self._pool
         if pool is not None:
             reg.gauge("serve_pages_used",

@@ -227,6 +227,26 @@ class PagedKVPool:
         self.pages_peak = max(self.pages_peak, self.used_count)
         return pid, dst
 
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Shrink the slot's allocation back to what ``n_tokens``
+        positions need; returns how many pages were recycled.
+
+        The speculative-decode rollback: a verify step allocates pages
+        out to the full draft length, and when the model rejects a
+        suffix the tail pages hold only garbage K/V (already masked by
+        ``valid_len`` until real tokens overwrite those positions).
+        Tail pages were freshly allocated for positions past the live
+        prefix, so they are never prefix-cache-shared; release still
+        goes through the refcount for safety."""
+        keep = pages_for(n_tokens, self.page)
+        n = 0
+        while len(self.slot_pages[slot]) > keep:
+            pid = self.slot_pages[slot].pop()
+            self.block_tables[slot, len(self.slot_pages[slot])] = 0
+            self.tables_dirty = True
+            n += bool(self.release(pid))
+        return n
+
     def free_slot(self, slot: int) -> int:
         """Drop the slot's references; returns how many pages were recycled
         (pages still held by the prefix cache stay allocated)."""

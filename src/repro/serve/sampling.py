@@ -1,0 +1,168 @@
+"""Jitted sampling head: token selection INSIDE the serving step.
+
+Token selection used to be a stray un-jitted ``jnp.argmax`` dispatched
+after every ``step``/``solo_step`` call — a vocab-sized ``[B, C, V]``
+logits array crossed the jit boundary each round and the selection work
+was invisible to the cost attribution (``obs/costs.py``). This module is
+the fused epilogue ``serve/steps.py`` appends to the forward pass: the
+step now returns selected token ids ``[B, C]`` (+ per-token logprobs
+``[B, C]``), and only those leave the device.
+
+Contract
+--------
+:func:`select_tokens` is pure jax, traced into every serving step:
+
+  * **Greedy is the oracle.** A lane with ``temperature <= 0`` takes
+    ``argmax(logits)`` — bitwise the same selection the engine used to
+    run out of jit, so greedy decode is token-identical to the pre-head
+    engine and stays the parity baseline for every other path.
+  * **Sampling** (``temperature > 0``): logits are scaled by
+    ``1/temperature``, masked by top-k (keep the k highest; ``0`` =
+    off) and top-p (keep the smallest set whose cumulative mass reaches
+    ``p``, always at least the top token; ``1.0`` = off; the two masks
+    are computed on the scaled logits and intersected), then drawn via
+    ``jax.random.categorical``. All sampling knobs are traced ``[B]``
+    arrays — one compile per step width serves every parameter combo.
+  * **PRNG keys** fold per the SNIPPETS ``fold_in_str`` idiom: the
+    engine derives one key per request, ``fold_in_str(PRNGKey(seed),
+    f"req/{uid}")`` (:func:`request_key`), and the head folds the
+    token's absolute position in per column. A token's key therefore
+    depends only on ``(seed, uid, position)`` — never on batch layout —
+    so solo-lane vs batched rounds, preemption recompute, and
+    speculative re-verification all draw the same stream.
+  * **Logprobs** are the model-distribution log-softmax at the selected
+    token (temperature-independent — the probability the MODEL assigned,
+    the serving-API convention), for greedy and sampled lanes alike.
+  * **Dead lanes read a sentinel.** Columns at or past ``n_new[b]``
+    (idle lanes, right padding) return :data:`DEAD_TOKEN` = -1 — an id
+    no vocab contains — so an emit-path bug that reads a dead lane
+    surfaces as an impossible token instead of hiding behind a
+    legitimate vocab id 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import zlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# token id returned for dead lanes / padding columns: never a vocab id,
+# so it cannot masquerade as a real emission (see module docstring)
+DEAD_TOKEN = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request token-selection policy (``Request.sampling``).
+
+    The default is greedy — ``temperature=0`` takes the argmax path that
+    is bitwise the pre-sampling-head oracle. ``top_k=0`` / ``top_p=1.0``
+    disable those filters; ``seed`` roots the request's PRNG stream
+    (folded with the request uid and each token's absolute position);
+    ``logprobs=True`` asks the engine to record the selected token's
+    model logprob in ``Request.out_logprobs`` alongside each emission.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+    logprobs: bool = False
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+GREEDY = SamplingParams()
+
+
+def fold_in_str(key, s: str):
+    """Fold a string into a PRNG key (the SNIPPETS ``fold_in_str``
+    idiom): names the derivation instead of magic integer folds."""
+    return jax.random.fold_in(key, np.uint32(zlib.crc32(s.encode("utf-8"))))
+
+
+@functools.lru_cache(maxsize=None)
+def _base_key(seed: int):
+    return jax.random.PRNGKey(seed)
+
+
+def request_key(seed: int, uid: int) -> np.ndarray:
+    """Per-request raw key data ``[2] uint32``: the seed's base key with
+    ``req/<uid>`` folded in. Depends only on (seed, uid), so a preempted
+    request re-draws its exact stream on recompute."""
+    return np.asarray(fold_in_str(_base_key(int(seed)), f"req/{uid}"),
+                      np.uint32)
+
+
+def lane_inputs(n: int) -> Dict[str, np.ndarray]:
+    """Greedy-initialized host-side per-lane sampling arrays, the pytree
+    the step's ``sampling`` argument is built from (lane ``b`` holds its
+    request's :class:`SamplingParams` fields)."""
+    return {"temp": np.zeros(n, np.float32),
+            "top_k": np.zeros(n, np.int32),
+            "top_p": np.ones(n, np.float32),
+            "key": np.zeros((n, 2), np.uint32)}
+
+
+def set_lane(samp: Dict[str, np.ndarray], lane: int,
+             sp: Optional[SamplingParams], uid: int = 0) -> None:
+    """Write one request's params into its lane of a :func:`lane_inputs`
+    table (``sp=None`` resets the lane to greedy)."""
+    sp = sp or GREEDY
+    samp["temp"][lane] = sp.temperature
+    samp["top_k"][lane] = sp.top_k
+    samp["top_p"][lane] = sp.top_p
+    samp["key"][lane] = (request_key(sp.seed, uid) if sp.temperature > 0
+                         else 0)
+
+
+def select_tokens(logits, temp, top_k, top_p, key, positions, n_new):
+    """The fused token-selection epilogue (see module docstring).
+
+    ``logits [B, C, V]``; ``temp``/``top_k``/``top_p`` ``[B]`` traced
+    lane params; ``key [B, 2]`` raw per-request key data; ``positions
+    [B, C]`` absolute token positions (folded into the per-column keys);
+    ``n_new [B]`` live-column counts. Returns ``(tokens [B, C] int32,
+    logprobs [B, C] float32)`` with dead columns at :data:`DEAD_TOKEN` /
+    0.0 logprob.
+    """
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logp_model = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+    def lane(lg, t, k, p, kd, pos):
+        # lg [C, V]; everything else lane-scalar (pos [C])
+        scaled = lg.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+        asc = jnp.sort(scaled, axis=-1)
+        kk = jnp.clip(k, 1, v)
+        kth = jnp.take_along_axis(
+            asc, jnp.full((scaled.shape[0], 1), v - kk), axis=-1)[:, 0]
+        keep_k = jnp.where(k > 0, scaled >= kth[:, None], True)
+        desc = asc[:, ::-1]
+        cum = jnp.cumsum(jax.nn.softmax(desc, axis=-1), axis=-1)
+        n_keep = jnp.sum(cum < p, axis=-1) + 1   # smallest set, mass >= p
+        pth = jnp.take_along_axis(desc, (n_keep - 1)[:, None],
+                                  axis=-1)[:, 0]
+        keep_p = jnp.where(p < 1.0, scaled >= pth[:, None], True)
+        masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+        keys_c = jax.vmap(lambda q: jax.random.fold_in(kd, q))(pos)
+        return jax.vmap(jax.random.categorical)(keys_c,
+                                                masked).astype(jnp.int32)
+
+    sampled = jax.vmap(lane)(logits, temp, top_k, top_p, key, positions)
+    tok = jnp.where((temp > 0.0)[:, None], sampled, greedy)
+    logp = jnp.take_along_axis(logp_model, tok[..., None], axis=-1)[..., 0]
+    cols = jnp.arange(tok.shape[1], dtype=jnp.int32)[None, :]
+    live = cols < n_new[:, None].astype(jnp.int32)
+    return (jnp.where(live, tok, DEAD_TOKEN),
+            jnp.where(live, logp, 0.0))

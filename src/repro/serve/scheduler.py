@@ -166,6 +166,21 @@ class FifoScheduler:
         self._round_budget -= n
         return n
 
+    def grant_verify(self, n_draft: int) -> int:
+        """Draft tokens a decode lane may verify this round (speculative
+        decode), drawn from the SAME per-round ``max_prefill_tokens``
+        budget as chunk grants: verify columns are extra step width
+        exactly like prefill tokens, so they must not starve prefill
+        lanes the budget was sized for. Unlike :meth:`grant_chunk` there
+        is no first-grant exemption — drafts are optional work; a lane
+        that gets 0 here simply decodes one token as usual (the carried
+        token is never charged)."""
+        n = min(int(n_draft), self._round_budget)
+        if n <= 0:
+            return 0
+        self._round_budget -= n
+        return n
+
     def next_admission(self, free_pages: int) -> Optional[Admission]:
         """Pop the queue head if a slot's first chunk can start now.
 

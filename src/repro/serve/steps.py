@@ -18,8 +18,8 @@ functions with **explicit input/output shardings**.
 
 The unified step contract
 -------------------------
-  ``step(params, tokens [B, C], arena, start [B], n_new [B]) ->
-  (logits [B, C, V], arena)``
+  ``step(params, tokens [B, C], arena, start [B], n_new [B], sampling)
+  -> (tokens [B, C] int32, logprobs [B, C] float32, arena)``
 
   Lane ``b`` runs ``n_new[b]`` new tokens at absolute positions
   ``start[b] + t``: a decode lane carries one token (``n_new = 1``), a
@@ -34,6 +34,29 @@ The unified step contract
   gone. ``reset_state(arena, slot)`` zeroes a slot's dense SSM/conv rows
   at admission (``None`` for attention-only stacks); ``page_copy`` is
   the device half of ``PagedKVPool.cow``.
+
+  **Sampling head** — token selection is FUSED into the step: the raw
+  ``[B, C, V]`` logits never cross the jit boundary (they used to feed
+  a stray out-of-jit ``jnp.argmax`` dispatch per round, invisible to
+  cost attribution). ``sampling`` is a pytree of traced ``[B]`` lane
+  params — ``{"temp" f32, "top_k" i32, "top_p" f32, "key" [B,2] u32}``
+  (see ``serve.sampling.lane_inputs``) — so one compile per width C
+  serves every parameter combo. A ``temp <= 0`` lane takes the argmax
+  path bitwise (greedy stays the oracle); sampled lanes draw via
+  ``jax.random.categorical`` with top-k/top-p masks, per-column keys
+  folded from the lane key + the token's absolute position (layout-
+  independent streams — see ``serve/sampling.py`` for the full
+  contract). The returned logprobs are the model-distribution
+  log-softmax at the selected token; dead columns (at or past
+  ``n_new[b]``) return ``sampling.DEAD_TOKEN`` = -1, never a vocab id.
+
+  **Verify steps** (self-speculative decode) are the SAME step at the
+  same rungs: a lane verifying k draft tokens runs ``n_new = 1 + k``
+  through the smallest ``width_ladder`` rung covering it — column 0
+  carries the last real token, columns 1..k the draft, and the
+  selected-token row doubles as the per-column verdict
+  (``serve/speculative.py``). Zero new compiled shapes; the dispatch
+  lands in the step's ``C<rung>`` cost row like any prefill chunk.
 
   **Batched page-ops** — ``apply_page_ops(arena, copy_src [S],
   copy_dst [S], table_updates [S, P], reset_mask [S])`` coalesces ALL of
@@ -103,6 +126,7 @@ from repro.models.config import ModelConfig
 from repro.models.model import decode_step as _decode
 from repro.models.model import forward as _forward
 from repro.models.model import prefill as _prefill
+from repro.serve import sampling
 
 
 # ==========================================================================
@@ -311,8 +335,9 @@ class TracedJit:
 
 def _step_cost_key(args, kw) -> str:
     """Call-shape key for the unified step's cost tables: its token
-    width C (``tokens`` is positional arg 1) — the engine drives exactly
-    C in {1, chunk}, so the attribution table gets one row per width."""
+    width C (``tokens`` is positional arg 1) — the engine drives C = 1
+    plus ``width_ladder`` rungs (prefill chunks AND speculative verify
+    steps alike), so the attribution table gets one row per width."""
     return f"C{args[1].shape[1]}"
 
 
@@ -325,16 +350,19 @@ class PagedServeSteps:
 
     geometry they were built for (the engine validates compatibility).
 
-      step(params, tokens [B,C], arena, start [B], n_new [B]) ->
-          (logits [B,C,V], arena)      (compiles once per C in {1, chunk})
+      step(params, tokens [B,C], arena, start [B], n_new [B], sampling)
+          -> (tok [B,C], logp [B,C], arena)
+          (compiles once per C in {1} + width_ladder(chunk); token
+          selection is fused — raw logits never leave the jit)
       page_copy(arena, src, dst) -> arena
       reset_state(arena, slot) -> arena    (None for attention-only cfgs)
       apply_page_ops(arena, copy_src [S], copy_dst [S],
                      table_updates [S,P], reset_mask [S]) -> arena
           (one fused call per round: COW copies + table rebuild + resets)
-      solo_step(params, tokens [1,C], arena, slot, start [1], n_new [1])
-          -> (logits [1,C,V], arena)   (single-live-lane rounds at B=1;
-          None under a mesh — compiles once per C, slot is traced)
+      solo_step(params, tokens [1,C], arena, slot, start [1], n_new [1],
+                sampling) -> (tok [1,C], logp [1,C], arena)
+          (single-live-lane rounds at B=1; None under a mesh — compiles
+          once per C, slot is traced)
     """
     cfg: ModelConfig
     mesh: Optional[object]
@@ -505,12 +533,14 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
     b_sh = NamedSharding(mesh, shd.batch_spec(mesh, max_slots))
     tok_sh = NamedSharding(mesh, P(*(tuple(shd.batch_spec(mesh, max_slots))
                                      + (None,))))
-    l_sh = _logits_bcv(mesh, max_slots, cfg)
+    # traced sampling lane params: [B] knobs shard with the batch, the
+    # [B, 2] raw key rides the token spec; [B, C] outputs likewise
+    samp_sh = {"temp": b_sh, "top_k": b_sh, "top_p": b_sh, "key": tok_sh}
     step_body = _step_body(cfg, paged_attention)
 
-    def step_fn(params, tokens, arena, start, n_new):
+    def step_fn(params, tokens, arena, start, n_new, samp):
         with ctx.use_mesh(mesh, dp):
-            return step_body(params, tokens, arena, start, n_new)
+            return step_body(params, tokens, arena, start, n_new, samp)
 
     reset = None
     if any(k == "mamba" or k.startswith("hybrid") for k in cfg.pattern):
@@ -527,8 +557,8 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
         step=TracedJit(
             "step",
             jax.jit(step_fn,
-                    in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh),
-                    out_shardings=(l_sh, a_sh),
+                    in_shardings=(p_sh, tok_sh, a_sh, b_sh, b_sh, samp_sh),
+                    out_shardings=(tok_sh, tok_sh, a_sh),
                     **_donate((2,))), step_shapes,
             cost_key=_step_cost_key),
         page_copy=TracedJit(
@@ -545,17 +575,6 @@ def build_paged_steps(cfg: ModelConfig, mesh=None, params_struct=None, *,
         solo_step=None)
 
 
-def _logits_bcv(mesh, batch: int, cfg) -> NamedSharding:
-    """[B, C, V] step logits: batch on dp when divisible, vocab on model
-    when divisible; the chunk axis replicates."""
-    bs = shd.batch_spec(mesh, batch)
-    b_ax = bs[0] if len(bs) > 0 else None
-    tp_n = meshlib.axis_size(mesh, "model")
-    v_ax = "model" if ("model" in mesh.axis_names
-                       and cfg.vocab % tp_n == 0) else None
-    return NamedSharding(mesh, P(b_ax, None, v_ax))
-
-
 # --------------------------------------------------------------------------
 # step bodies (shared by the mesh-less lru-cached jits and the sharded
 # builders above)
@@ -568,9 +587,11 @@ def _step_body(cfg: ModelConfig, paged_attention: bool):
     ``valid_len = start + n_new`` masks reads past each lane's bound,
     routes right-padding K/V writes to the null page, and (converted to
     a relative count inside ``blocks.apply_block``) keeps recurrent SSM
-    state clean for idle and padded lanes."""
+    state clean for idle and padded lanes. The fused
+    ``sampling.select_tokens`` epilogue turns the logits into selected
+    token ids + logprobs before anything leaves the jit."""
 
-    def step(params, tokens, arena, start, n_new):
+    def step(params, tokens, arena, start, n_new, samp):
         c = tokens.shape[1]
         positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
         valid = start + n_new
@@ -578,7 +599,10 @@ def _step_body(cfg: ModelConfig, paged_attention: bool):
                                         positions=positions, cache=arena,
                                         valid_len=valid,
                                         paged_attention=paged_attention)
-        return logits, new_arena
+        tok, logp = sampling.select_tokens(
+            logits, samp["temp"], samp["top_k"], samp["top_p"],
+            samp["key"], positions, n_new)
+        return tok, logp, new_arena
 
     return step
 
@@ -659,7 +683,7 @@ def _solo_step_body(cfg: ModelConfig, paged_attention: bool):
     kept on the way out."""
     step = _step_body(cfg, paged_attention)
 
-    def solo(params, tokens, arena, slot, start, n_new):
+    def solo(params, tokens, arena, slot, start, n_new, samp):
         view = {}
         for i, kind in enumerate(cfg.pattern):
             key = f"b{i}"
@@ -677,7 +701,7 @@ def _solo_step_body(cfg: ModelConfig, paged_attention: bool):
                     mm["conv"], slot, 1, axis=1)
                 grp["mamba"] = mm
             view[key] = grp
-        logits, stepped = step(params, tokens, view, start, n_new)
+        tok, logp, stepped = step(params, tokens, view, start, n_new, samp)
         out = {}
         for i, kind in enumerate(cfg.pattern):
             key = f"b{i}"
@@ -697,7 +721,7 @@ def _solo_step_body(cfg: ModelConfig, paged_attention: bool):
                     mm["conv"], sg["mamba"]["conv"], slot, axis=1)
                 grp["mamba"] = mm
             out[key] = grp
-        return logits, out
+        return tok, logp, out
 
     return solo
 

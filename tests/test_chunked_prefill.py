@@ -273,9 +273,9 @@ def test_step_widths_bounded_to_ladder(params, monkeypatch):
     widths = set()
     real_step = eng._steps.step
 
-    def spy(params_, toks, arena, start, n_new):
+    def spy(params_, toks, arena, start, n_new, samp):
         widths.add(toks.shape[1])
-        return real_step(params_, toks, arena, start, n_new)
+        return real_step(params_, toks, arena, start, n_new, samp)
 
     object.__setattr__(eng._steps, "step", spy)
     eng.run(_reqs(n=8, lo=4, hi=30, max_new=4, seed=37))

@@ -116,16 +116,24 @@ def test_fused_flush_batches_cow_copies(serve_cfg, serve_params):
 
 def test_solo_step_parity(serve_cfg, serve_params):
     """A single in-flight request decodes through the B=1 solo lane —
-    token-identical to the full-width batch step."""
+    token-identical to the full-width batch step, and no dead-lane
+    sentinel ever surfaces through on_token (the solo scatter used to
+    fill dead lanes with vocab id 0, indistinguishable from a real
+    emission; they now carry DEAD_TOKEN = -1 and must never escape)."""
+    from repro.serve.sampling import DEAD_TOKEN
     prompt = np.arange(2, 12, dtype=np.int32)
+    streamed = []
     solo = _engine(serve_cfg, serve_params)
-    out_s = solo.run([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+    out_s = solo.run([Request(uid=0, prompt=prompt, max_new_tokens=6)],
+                     on_token=lambda s, t, r: streamed.append(int(t)))
     batch = _engine(serve_cfg, serve_params,
                     step_set=_legacy_steps(serve_cfg))
     out_b = batch.run([Request(uid=0, prompt=prompt, max_new_tokens=6)])
     assert out_s[0].out_tokens == out_b[0].out_tokens
     assert solo.stats.solo_rounds > 0
     assert batch.stats.solo_rounds == 0
+    assert DEAD_TOKEN not in streamed
+    assert streamed == out_s[0].out_tokens
 
 
 def test_weight_plan_parity(serve_cfg, serve_params):
