@@ -43,6 +43,11 @@ KEY_RATIOS = {
     # for trajectory, not gated
     "speculative.tokens_per_s_vs_greedy":
         "speculative_tokens_per_s_vs_greedy",
+    # warn-only: host and device work share the same cores on the CPU
+    # bench host, so the dispatch/retire overlap win is muted and noisy
+    # there — tracked for trajectory (an accelerator backend is where
+    # the ratio earns a gate)
+    "pipeline.tokens_per_s_vs_sync": "pipeline_tokens_per_s_vs_sync",
 }
 
 # higher-is-better ratios that fail the check when they regress below

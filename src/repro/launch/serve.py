@@ -69,6 +69,12 @@ def main():
                     help="self-speculative decode: up to K prompt-lookup "
                          "draft tokens verified per greedy decode lane "
                          "per round (0 = off)")
+    ap.add_argument("--pipelined", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="overlap host and device work on steady-state "
+                         "decode: async step dispatch, on-device token "
+                         "carry, retire via async readback one round "
+                         "later (token-identical to the sync loop)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV pages copy-on-write")
     ap.add_argument("--paged-attention", action="store_true",
@@ -176,7 +182,7 @@ def main():
                       prefix_cache=args.prefix_cache,
                       paged_attention=args.paged_attention,
                       sampling=sp, speculative_k=args.speculative,
-                      tracer=tracer)
+                      pipelined=args.pipelined, tracer=tracer)
     if args.profile:
         with jax.profiler.trace(args.profile):
             eng.run(reqs)
@@ -198,6 +204,11 @@ def main():
         print(f"[serve] phases: host={s.host_seconds():.2f}s "
               f"device={s.device_seconds():.2f}s over {s.rounds} rounds "
               f"({s.jit_compiles} jit compiles, ~{s.jit_compile_s:.2f}s)")
+    if args.pipelined:
+        print(f"[serve] pipelined: {s.pipelined_rounds}/{s.rounds} "
+              f"rounds overlapped ({s.pipeline_overlap:.0%}), "
+              f"{s.pipeline_barriers} drains, "
+              f"{s.lag_trimmed_tokens} lag-trimmed tokens")
     if args.chunked_prefill and s.ttft_s:
         import numpy as _np
         print(f"[serve] chunked prefill: TTFT p50="

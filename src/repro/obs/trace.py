@@ -31,6 +31,21 @@ and strictly inside their round's wall window, emitted by
   * ``round/emit``         — token emission, stats, streaming callbacks,
     publish/finish/requeue bookkeeping.
 
+Pipelined engines (``ServeEngine(pipelined=True)``) add two phases and
+relax the window rule for one of them:
+
+  * ``round/dispatch``     — the async step dispatch of an overlapped
+    round: device-token carry + enqueue + ``copy_to_host_async``, NO
+    ``block_until_ready`` (that is the point). Backends that bound
+    their in-flight queue (CPU XLA) can still block the enqueue on the
+    previous round's compute, so ``EngineStats`` charges this span as
+    device wait, not host work.
+  * ``round/retire``       — readback-complete + emission of the
+    PREVIOUS round. A pipelined retire necessarily lands inside the
+    NEXT round's wall window — the one sanctioned exception to the
+    "strictly inside their round" rule above; synchronous engines never
+    emit these two spans and keep the original contract bit-for-bit.
+
 Request lifecycle — instant events with ``uid`` (and ``slot``) args,
 emitted by ``serve/engine.py``:
 

@@ -31,6 +31,42 @@ lookup draft proposes up to k tokens per decode lane and ONE verify call
 on an already-compiled ``width_ladder`` rung accepts a prefix
 (``serve/speculative.py``); rejected positions roll back through
 ``PagedKVPool.trim`` and the fused page-op queue.
+
+The pipelined round loop (``pipelined=True``)
+---------------------------------------------
+Steady-state decode runs as a device-resident loop: a pure-decode round
+with an idle admission queue dispatches its step WITHOUT blocking and is
+retired one round later, overlapped with the next round's host planning
+and dispatch. The contract:
+
+  * **What overlaps.** Only pure-decode rounds (no prefill chunks, no
+    speculative verify, no pending admissions). The next round's input
+    tokens are the previous step's on-device output, fed straight back
+    in (``steps.carry_decode_tokens``) — decode tokens never round-trip
+    through host. Readback starts asynchronously at dispatch
+    (``copy_to_host_async`` where available); emission, EOS checks and
+    scheduling run at retire, one round behind the in-flight dispatch.
+  * **What barriers.** Admission, preemption, prefill grants, and any
+    allocation that needs eviction-by-preemption drain the pipeline:
+    retire the in-flight round, then run the next round synchronously
+    (its fused ``apply_page_ops`` flush therefore dispatches only after
+    the drained round's state is final — refcount/COW invariants and
+    the one-dispatch-per-round cost-attribution contract survive).
+    Plain decode page growth and prefix-cache evictions are NOT
+    barriers: their table flush is device-ordered behind the in-flight
+    step by the arena data dependency.
+  * **EOS lag.** Budget and capacity finishes are predicted at dispatch
+    (``FifoScheduler.grant_decode``), so only an EOS landing during the
+    one-round lag overruns — by exactly the one in-flight token, which
+    is never emitted: its lane's pages are rolled back via the same
+    ``PagedKVPool.trim`` used for rejected speculative drafts
+    (``EngineStats.lag_trimmed_tokens``), and the lane's slot is freed
+    only once the overrun round retires.
+  * **Parity.** Sampling keys fold from absolute positions only and
+    greedy is a bitwise argmax, so pipelined decode is token-identical
+    to the synchronous loop for greedy, sampled and speculative lanes
+    (speculative rounds need retired host history to draft, so they
+    simply never overlap — and speculative greedy equals plain greedy).
 """
 from __future__ import annotations
 
@@ -133,6 +169,15 @@ class EngineStats:
     page_ops_batched: int = 0
     # rounds run through the B=1 solo-lane step (exactly one live lane)
     solo_rounds: int = 0
+    # pipelined round loop (engine built with pipelined=True): rounds
+    # whose retire was deferred behind the next dispatch (async
+    # readback, device-token carry), drain events (admission /
+    # preemption / prefill / alloc-pressure barriers, incl. the final
+    # drain), and tokens computed past an EOS that landed during the
+    # one-round lag — trimmed via PagedKVPool.trim, never emitted
+    pipelined_rounds: int = 0
+    pipeline_barriers: int = 0
+    lag_trimmed_tokens: int = 0
     # self-speculative decode: rounds that carried a verify lane, draft
     # tokens proposed, and draft tokens the model accepted (the bonus
     # emissions beyond what plain decode would have produced)
@@ -167,6 +212,11 @@ class EngineStats:
                 if self.spec_draft_tokens else 0.0)
 
     @property
+    def pipeline_overlap(self) -> float:
+        """Fraction of rounds retired through the async pipeline."""
+        return self.pipelined_rounds / self.rounds if self.rounds else 0.0
+
+    @property
     def page_op_round_trips_saved(self) -> int:
         """Device dispatches the fused page-op path avoided."""
         return max(0, self.page_ops_batched - self.page_op_flushes)
@@ -199,16 +249,30 @@ class EngineStats:
             gaps.extend(b - a for a, b in zip(times, times[1:]))
         return gaps
 
+    _DEVICE_PHASES = ("round/device_step", "round/dispatch",
+                      "round/retire")
+
     def host_seconds(self) -> float:
-        """Wall seconds in host-side round phases (everything but the
-        jitted device step)."""
+        """Wall seconds in host-side round phases — admission, grants,
+        host array prep, emission bookkeeping: the planning work only
+        the host can do. Excludes every device-coupled span: the
+        synchronous step, the pipelined retire (readback wait, with the
+        emission bookkeeping riding inside it charged to the device
+        side as a documented approximation), and the pipelined dispatch
+        — nominally a pure async enqueue, but backends that bound their
+        in-flight queue (CPU XLA) block the enqueue on the previous
+        round's compute, so its wall is device wait too."""
         return sum(v for k, v in self.phase_seconds.items()
-                   if k != "round/device_step")
+                   if k not in self._DEVICE_PHASES)
 
     def device_seconds(self) -> float:
-        """Wall seconds in the device step phase (includes jit compile
-        time on cold geometries — ``jit_compile_s`` bounds that part)."""
-        return self.phase_seconds.get("round/device_step", 0.0)
+        """Wall seconds blocked on or waiting for the device: the
+        synchronous step phase plus the pipelined dispatch and retire
+        spans (enqueue backpressure + readback wait). Includes jit
+        compile time on cold geometries — ``jit_compile_s`` bounds that
+        part."""
+        return sum(self.phase_seconds.get(k, 0.0)
+                   for k in self._DEVICE_PHASES)
 
 
 def _finished(req: Request, pos: int, max_len: int) -> bool:
@@ -271,7 +335,7 @@ class ServeEngine:
     covers its widest grant: C = 1 for pure decode, else a pow2 rung
     from ``serve_steps.width_ladder`` — so a cached-prefix suffix or a
     short tail chunk is not padded out to the full chunk. The ladder is
-    log2(chunk/8) + 2 shapes, lru-shared across engines.
+    log2(chunk/4) + 2 shapes, lru-shared across engines.
 
     ``prefix_cache=True`` keeps finished prompts' full KV pages in a radix
     index (``serve/prefix_cache.py``): admissions whose prompt shares a
@@ -321,6 +385,15 @@ class ServeEngine:
     (SSM state cannot roll back), and sampled (``temperature > 0``)
     lanes always decode one token at a time.
 
+    ``pipelined=True`` overlaps host and device work on steady-state
+    decode per the module-docstring pipeline contract: pure-decode
+    rounds dispatch without blocking, carry the previous step's
+    on-device tokens as input, and retire via async readback one round
+    later; mutation rounds drain the pipeline first. Token-identical to
+    the default synchronous loop on every lane type; the new
+    ``round/dispatch``/``round/retire`` spans and ``serve_pipeline_*``
+    metrics record the overlap.
+
     ``mesh`` (a jax Mesh with ``data``/``model`` axes) runs every step
     sharded: the arena's page axis over ``data``, attention heads / TP
     weight dims (including ShardedQTensor stream stacks) over ``model``.
@@ -351,6 +424,7 @@ class ServeEngine:
                  weight_plan: bool = True,
                  sampling: Optional[SamplingParams] = None,
                  speculative_k: int = 0,
+                 pipelined: bool = False,
                  tracer: Optional[obs_trace.Tracer] = None,
                  metrics: Optional[obs_metrics.Registry] = None):
         if cfg.is_encdec or cfg.n_vis_tokens:
@@ -401,6 +475,7 @@ class ServeEngine:
         self._samp = samplib.lane_inputs(slots)
         self._slot_sp: List[SamplingParams] = [samplib.GREEDY] * slots
         self._spec_k = int(speculative_k)
+        self._pipelined = bool(pipelined)
         self._dedup = attn_only if inflight_dedup is None \
             else inflight_dedup
         # co-scheduling a 1-token decode into a C-wide step is bitwise
@@ -629,8 +704,13 @@ class ServeEngine:
             return (active[s] is not None
                     and pos[s] < len(active[s].prompt))
 
-        def emit(s: int, tok: int, req: Request) -> None:
-            now = time.monotonic()
+        def emit(s: int, tok: int, req: Request,
+                 now: Optional[float] = None) -> None:
+            # pipelined retires pass the readback-complete timestamp so
+            # the one-round lag never skews ttft/ITL; the sync path's
+            # per-token clock reads are bit-identical to before
+            if now is None:
+                now = time.monotonic()
             self.stats.emit_times.setdefault(req.uid, []).append(now)
             if req.uid not in seen_first:
                 seen_first.add(req.uid)
@@ -646,11 +726,18 @@ class ServeEngine:
                 if n_full:
                     cache.insert(req.prompt, pool.slot_pages[s][:n_full])
 
-        def finish(s: int) -> None:
+        def finish(s: int, defer_rec=None) -> None:
             req = active[s]
             req.done = True
             active[s] = None
-            pool.free_slot(s)
+            if defer_rec is not None and s in defer_rec["act_dec"]:
+                # EOS during the pipeline lag: the in-flight round
+                # already computed (and allocated for) one more token on
+                # this lane — keep the slot's pages mapped until that
+                # round retires, then trim the overrun and free
+                defer_rec["lag_free"].add(s)
+            else:
+                pool.free_slot(s)
             sched.on_finish(s)
             trc.instant("req/finished", uid=req.uid, slot=s,
                         tokens=len(req.out_tokens))
@@ -750,8 +837,261 @@ class ServeEngine:
                     break
                 free_slots.pop(0)
 
+        # ---- dispatch/retire machinery -----------------------------
+        # Every round is dispatched exactly once through dispatch() and
+        # emitted exactly once through process_round(); the synchronous
+        # path gathers inline, the pipelined path (pipelined=True) keeps
+        # one round in flight and retires it overlapped with the next
+        # round's host work (module docstring: pipeline contract).
+
+        def process_round(rec, nxt, logp_h, now=None, defer_rec=None):
+            """Emission / EOS / scheduling for one completed round (the
+            emit half of the round loop). Returns the tokens emitted.
+            ``now`` stamps every emission (retires pass the readback-
+            complete time); ``defer_rec`` is the round still in flight,
+            whose lanes defer their page frees to its own retire."""
+            plan, verify = rec["plan"], rec["verify"]
+            act_dec, n_new = rec["act_dec"], rec["n_new"]
+            c_len = rec["c_len"]
+            emitted = 0
+            for s in rec["order"]:
+                req = active[s]
+                if req is None:
+                    continue
+                if s in plan:
+                    n = plan[s]
+                    pos[s] += n
+                    sched.note_progress(s, int(pos[s]))
+                    self.stats.prefill_chunks += 1
+                    self.stats.prefill_tokens += n
+                    self.stats.prefill_tokens_padded += c_len
+                    trc.instant("req/chunk_done", uid=req.uid,
+                                slot=s, pos=int(pos[s]))
+                    if int(pos[s]) < len(req.prompt):
+                        continue        # mid-prompt: more chunks due
+                    # last chunk: the logit at the prompt's final
+                    # token is the request's first generated token
+                    self.stats.prefills += 1
+                    publish(req, s)
+                    sched.miss_closed(s)
+                    tok = int(nxt[s, n - 1])
+                    assert tok != samplib.DEAD_TOKEN, \
+                        f"emit read a dead lane (slot {s})"
+                    req.out_tokens.append(tok)
+                    if self._slot_sp[s].logprobs:
+                        req.out_logprobs.append(
+                            float(logp_h[s, n - 1]))
+                    self.stats.tokens_out += 1
+                    emitted += 1
+                    if _finished(req, len(req.prompt), self.max_len):
+                        req.done = True  # e.g. EOS at prefill: never
+                        active[s] = None  # enters a decode round
+                        pool.free_slot(s)
+                        sched.on_finish(s)
+                        emit(-1, tok, req, now)
+                        trc.instant("req/finished", uid=req.uid,
+                                    slot=-1,
+                                    tokens=len(req.out_tokens))
+                    else:
+                        next_tok[s] = tok
+                        emit(s, tok, req, now)
+                elif s in act_dec:
+                    # plain decode is a verify round with an empty
+                    # draft: accept_greedy keeps the verified draft
+                    # prefix + the model's correction token, and a
+                    # draft-less lane accepts exactly its one token
+                    n = int(n_new[s])
+                    draft = verify.get(s)
+                    if draft is not None:
+                        n_acc = speculative.accept_greedy(
+                            draft, nxt[s, :n])
+                        self.stats.spec_draft_tokens += len(draft)
+                        self.stats.spec_accepted_tokens += n_acc - 1
+                    else:
+                        n_acc = 1
+                    fin = False
+                    for j in range(n_acc):
+                        tok = int(nxt[s, j])
+                        assert tok != samplib.DEAD_TOKEN, \
+                            f"emit read a dead lane (slot {s})"
+                        pos[s] += 1
+                        next_tok[s] = tok
+                        req.out_tokens.append(tok)
+                        if self._slot_sp[s].logprobs:
+                            req.out_logprobs.append(
+                                float(logp_h[s, j]))
+                        self.stats.tokens_out += 1
+                        emitted += 1
+                        emit(s, tok, req, now)
+                        if _finished(req, int(pos[s]), self.max_len):
+                            # accepted tokens past EOS (or past the
+                            # budget) are discarded, per the EOS
+                            # contract on run()
+                            finish(s, defer_rec)
+                            fin = True
+                            break
+                    if draft is not None and not fin \
+                            and n_acc < n:
+                        # speculative rollback: tail pages allocated
+                        # for rejected draft positions go back to
+                        # the pool; their garbage K/V stays masked
+                        # by valid_len until real tokens overwrite
+                        # those positions
+                        pool.trim(s, int(pos[s]))
+            self.stats.step_seconds.append(
+                (time.monotonic() if now is None else now) - rec["ts"])
+            self.stats.step_tokens.append(emitted)
+            return emitted
+
+        def gather(rec):
+            """Materialize a round's device outputs as full-width host
+            arrays (dead lanes carry DEAD_TOKEN); blocks until the
+            device — and any async readback — is done."""
+            s0 = rec["solo_slot"]
+            if s0 is not None:
+                nxt = np.full((self.slots, rec["c_len"]),
+                              samplib.DEAD_TOKEN, np.int64)
+                logp_h = np.zeros((self.slots, rec["c_len"]),
+                                  np.float32)
+                nxt[s0] = np.asarray(rec["tok_dev"])[0]
+                logp_h[s0] = np.asarray(rec["logp_dev"])[0]
+            else:
+                nxt = np.asarray(rec["tok_dev"])
+                logp_h = np.asarray(rec["logp_dev"])
+            return nxt, logp_h
+
+        def readback_async(rec):
+            # start the D2H copy at dispatch time so the retire's
+            # gather finds it complete (or at least in flight); arrays
+            # without the API just block in gather instead
+            for arr in (rec["tok_dev"], rec["logp_dev"]):
+                try:
+                    arr.copy_to_host_async()
+                except AttributeError:
+                    pass
+
+        def dispatch(toks_in, cache_in, start, n_new, solo_slot=None):
+            """The round's ONE async step dispatch — never blocks; the
+            sync path gathers inline, the pipelined path one round
+            later."""
+            if solo_slot is not None:
+                tok_dev, logp_dev, self._arena = self._steps.solo_step(
+                    self._step_params(), toks_in, cache_in,
+                    np.int32(solo_slot),
+                    jnp.asarray(start[solo_slot:solo_slot + 1]),
+                    jnp.asarray(n_new[solo_slot:solo_slot + 1]),
+                    {k: jnp.asarray(v[solo_slot:solo_slot + 1])
+                     for k, v in self._samp.items()})
+                self.stats.solo_rounds += 1
+            else:
+                tok_dev, logp_dev, self._arena = self._steps.step(
+                    self._step_params(), toks_in, cache_in,
+                    jnp.asarray(start), jnp.asarray(n_new),
+                    {k: jnp.asarray(v) for k, v in self._samp.items()})
+            return tok_dev, logp_dev
+
+        def retire(rec, defer_rec=None):
+            """Readback-complete + emission for a pipelined round. The
+            lag-freed lanes (EOS during the lag) trim their overrun
+            token's pages and release their slot HERE — only after the
+            round that computed past the EOS has fully retired."""
+            with phase("round/retire"):
+                nxt, logp_h = gather(rec)
+                now = time.monotonic()
+                emitted = process_round(rec, nxt, logp_h, now=now,
+                                        defer_rec=defer_rec)
+                for s in sorted(rec["lag_free"]):
+                    self.stats.lag_trimmed_tokens += int(rec["n_new"][s])
+                    pool.trim(s, int(pos[s]))
+                    pool.free_slot(s)
+            return emitted
+
+        inflight = None            # the dispatched-but-unretired round
+
         while any(a is not None for a in active) or sched.pending:
             r_t0 = time.perf_counter()
+            if inflight is not None:
+                # ---- pipelined fast path: grant pure-decode lanes
+                # against the in-flight round's predicted state, carry
+                # its on-device tokens into the next dispatch, THEN
+                # retire it (emission overlaps the device step) ------
+                dec: List[int] = []
+                order = []
+                barrier = sched.pending and any(a is None
+                                                for a in active)
+                if not barrier:
+                    with phase("round/grant"):
+                        order = sorted(
+                            (s for s in range(self.slots)
+                             if active[s] is not None),
+                            key=lambda s: sched.admitted_at[s])
+                        for s in order:
+                            req = active[s]
+                            if not sched.grant_decode(
+                                    len(req.out_tokens),
+                                    req.max_new_tokens, int(pos[s]),
+                                    self.max_len, lead=1):
+                                continue    # its last token retires in
+                                #             a moment; nothing to grant
+                            if s not in inflight["act_dec"]:
+                                # no carried token for this lane: drain
+                                # and let the sync path re-dispatch it
+                                barrier = True
+                                break
+                            if self._alloc(s, int(pos[s]) + 2) is None:
+                                barrier = True   # needs preemption
+                                break
+                            dec.append(s)
+                if barrier or not dec:
+                    # pipeline barrier: drain, then run the next round
+                    # synchronously — admission/preemption/prefill see
+                    # only retired state, and the sync round's page-op
+                    # flush dispatches after this retire
+                    self.stats.pipeline_barriers += 1
+                    prev, inflight = inflight, None
+                    retire(prev)
+                    continue
+                with phase("round/host_prep"):
+                    start = np.zeros(self.slots, np.int32)
+                    n_new = np.zeros(self.slots, np.int32)
+                    for s in dec:
+                        start[s] = int(pos[s]) + 1  # the in-flight
+                        n_new[s] = 1                # token's position
+                    ts = time.monotonic()
+                    self.stats.kv_pages_live += sum(
+                        pages_for(int(start[s]) + 1, self.page)
+                        for s in dec)
+                    self.stats.kv_pages_full += (
+                        len(dec) * self.max_pages_per_seq)
+                    cache_in = self._flush_page_ops(pool)
+                    solo = (self._steps.solo_step is not None
+                            and len(dec) == 1)
+                with phase("round/dispatch"):
+                    s0 = dec[0] if solo else None
+                    tok_in = serve_steps.carry_decode_tokens(
+                        inflight["tok_dev"], s0)
+                    tok_dev, logp_dev = dispatch(
+                        tok_in, cache_in, start, n_new, solo_slot=s0)
+                    rec = {"order": dec, "plan": {}, "verify": {},
+                           "act_dec": dec, "n_new": n_new, "c_len": 1,
+                           "ts": ts, "tok_dev": tok_dev,
+                           "logp_dev": logp_dev, "solo_slot": s0,
+                           "lag_free": set()}
+                    readback_async(rec)
+                self.stats.decode_steps += 1
+                self.stats.rounds += 1
+                self.stats.pipelined_rounds += 1
+                prev, inflight = inflight, rec
+                emitted = retire(prev, defer_rec=rec)
+                trc.counter("pool/pages", live=pool.used_count,
+                            free=pool.free_count)
+                trc.counter("sched/queue",
+                            prefill_pending=sched.pending)
+                trc.complete("round", r_t0,
+                             time.perf_counter() - r_t0,
+                             lanes=len(order), prefill_lanes=0,
+                             decode_lanes=len(dec), emitted=emitted)
+                continue
             with phase("round/admit"):
                 sched.start_round()
                 admit()
@@ -896,128 +1236,48 @@ class ServeEngine:
                 live = np.flatnonzero(n_new > 0)
                 solo = (self._steps.solo_step is not None
                         and len(live) == 1)
-            with phase("round/device_step"):
+            # a pure-decode round with an idle admission queue may enter
+            # the pipeline: dispatch without blocking, retire one round
+            # later (speculative lanes never overlap — drafting needs
+            # retired host history)
+            overlap = (self._pipelined and run_decode and not plan
+                       and not verify and self._spec_k == 0
+                       and not sched.pending)
+            with phase("round/dispatch" if overlap
+                       else "round/device_step"):
                 # token selection runs INSIDE the jit (the sampling-head
                 # epilogue): only [B, C] selected ids + logprobs cross
                 # the boundary, and dead lanes come back as the
                 # DEAD_TOKEN sentinel — never a forgeable vocab id
                 if solo:
                     s0 = int(live[0])
-                    tok_dev, logp_dev, self._arena = self._steps.solo_step(
-                        self._step_params(),
+                    tok_dev, logp_dev = dispatch(
                         jnp.asarray(toks[s0:s0 + 1]), cache_in,
-                        np.int32(s0), jnp.asarray(start[s0:s0 + 1]),
-                        jnp.asarray(n_new[s0:s0 + 1]),
-                        {k: jnp.asarray(v[s0:s0 + 1])
-                         for k, v in self._samp.items()})
-                    jax.block_until_ready(tok_dev)
-                    nxt = np.full((self.slots, c_len),
-                                  samplib.DEAD_TOKEN, np.int64)
-                    logp_h = np.zeros((self.slots, c_len), np.float32)
-                    nxt[s0] = np.asarray(tok_dev)[0]
-                    logp_h[s0] = np.asarray(logp_dev)[0]
-                    self.stats.solo_rounds += 1
+                        start, n_new, solo_slot=s0)
                 else:
-                    tok_dev, logp_dev, self._arena = self._steps.step(
-                        self._step_params(), jnp.asarray(toks), cache_in,
-                        jnp.asarray(start), jnp.asarray(n_new),
-                        {k: jnp.asarray(v)
-                         for k, v in self._samp.items()})
-                    jax.block_until_ready(tok_dev)
-                    nxt = np.asarray(tok_dev)
-                    logp_h = np.asarray(logp_dev)
+                    s0 = None
+                    tok_dev, logp_dev = dispatch(
+                        jnp.asarray(toks), cache_in, start, n_new)
+                rec = {"order": order, "plan": plan, "verify": verify,
+                       "act_dec": act_dec, "n_new": n_new,
+                       "c_len": c_len, "ts": ts, "tok_dev": tok_dev,
+                       "logp_dev": logp_dev, "solo_slot": s0,
+                       "lag_free": set()}
+                if overlap:
+                    readback_async(rec)
+                else:
+                    nxt, logp_h = gather(rec)
             if act_dec:
                 self.stats.decode_steps += 1
-
-            emitted = 0
-            with phase("round/emit"):
-                for s in order:
-                    req = active[s]
-                    if req is None:
-                        continue
-                    if s in plan:
-                        n = plan[s]
-                        pos[s] += n
-                        sched.note_progress(s, int(pos[s]))
-                        self.stats.prefill_chunks += 1
-                        self.stats.prefill_tokens += n
-                        self.stats.prefill_tokens_padded += c_len
-                        trc.instant("req/chunk_done", uid=req.uid,
-                                    slot=s, pos=int(pos[s]))
-                        if int(pos[s]) < len(req.prompt):
-                            continue        # mid-prompt: more chunks due
-                        # last chunk: the logit at the prompt's final
-                        # token is the request's first generated token
-                        self.stats.prefills += 1
-                        publish(req, s)
-                        sched.miss_closed(s)
-                        tok = int(nxt[s, n - 1])
-                        assert tok != samplib.DEAD_TOKEN, \
-                            f"emit read a dead lane (slot {s})"
-                        req.out_tokens.append(tok)
-                        if self._slot_sp[s].logprobs:
-                            req.out_logprobs.append(
-                                float(logp_h[s, n - 1]))
-                        self.stats.tokens_out += 1
-                        emitted += 1
-                        if _finished(req, len(req.prompt), self.max_len):
-                            req.done = True  # e.g. EOS at prefill: never
-                            active[s] = None  # enters a decode round
-                            pool.free_slot(s)
-                            sched.on_finish(s)
-                            emit(-1, tok, req)
-                            trc.instant("req/finished", uid=req.uid,
-                                        slot=-1,
-                                        tokens=len(req.out_tokens))
-                        else:
-                            next_tok[s] = tok
-                            emit(s, tok, req)
-                    elif s in act_dec:
-                        # plain decode is a verify round with an empty
-                        # draft: accept_greedy keeps the verified draft
-                        # prefix + the model's correction token, and a
-                        # draft-less lane accepts exactly its one token
-                        n = int(n_new[s])
-                        draft = verify.get(s)
-                        if draft is not None:
-                            n_acc = speculative.accept_greedy(
-                                draft, nxt[s, :n])
-                            self.stats.spec_draft_tokens += len(draft)
-                            self.stats.spec_accepted_tokens += n_acc - 1
-                        else:
-                            n_acc = 1
-                        fin = False
-                        for j in range(n_acc):
-                            tok = int(nxt[s, j])
-                            assert tok != samplib.DEAD_TOKEN, \
-                                f"emit read a dead lane (slot {s})"
-                            pos[s] += 1
-                            next_tok[s] = tok
-                            req.out_tokens.append(tok)
-                            if self._slot_sp[s].logprobs:
-                                req.out_logprobs.append(
-                                    float(logp_h[s, j]))
-                            self.stats.tokens_out += 1
-                            emitted += 1
-                            emit(s, tok, req)
-                            if _finished(req, int(pos[s]), self.max_len):
-                                # accepted tokens past EOS (or past the
-                                # budget) are discarded, per the EOS
-                                # contract on run()
-                                finish(s)
-                                fin = True
-                                break
-                        if draft is not None and not fin \
-                                and n_acc < n:
-                            # speculative rollback: tail pages allocated
-                            # for rejected draft positions go back to
-                            # the pool; their garbage K/V stays masked
-                            # by valid_len until real tokens overwrite
-                            # those positions
-                            pool.trim(s, int(pos[s]))
-                self.stats.step_seconds.append(time.monotonic() - ts)
-                self.stats.step_tokens.append(emitted)
             self.stats.rounds += 1
+            if overlap:
+                self.stats.pipelined_rounds += 1
+                inflight = rec
+                emitted = 0         # emissions land at this round's
+                #                     retire, one round from now
+            else:
+                with phase("round/emit"):
+                    emitted = process_round(rec, nxt, logp_h)
             # pool-pressure counter tracks, one sample per round — these
             # render as Perfetto counter lanes next to the phase spans
             trc.counter("pool/pages", live=pool.used_count,
@@ -1026,6 +1286,12 @@ class ServeEngine:
             trc.complete("round", r_t0, time.perf_counter() - r_t0,
                          lanes=len(order), prefill_lanes=len(plan),
                          decode_lanes=len(act_dec), emitted=emitted)
+
+        if inflight is not None:
+            # every lane finished (or deferred its free) during the lag
+            # and the loop fell through: retire the last in-flight round
+            retire(inflight)
+            inflight = None
 
         self.stats.preemptions = sched.preemptions
         self.stats.pages_peak = max(self.stats.pages_peak, pool.pages_peak)
@@ -1081,6 +1347,18 @@ class ServeEngine:
         reg.counter("serve_solo_rounds_total",
                     "rounds run through the B=1 solo-lane step"
                     ).inc(s.solo_rounds)
+        pipe = reg.counter("serve_pipeline_rounds_total",
+                           "pipelined-loop events by kind",
+                           labels=("kind",))
+        pipe.inc(s.pipelined_rounds, kind="overlapped")
+        pipe.inc(s.pipeline_barriers, kind="barrier")
+        reg.counter("serve_pipeline_trimmed_tokens_total",
+                    "tokens computed past an EOS during the pipeline "
+                    "lag, trimmed and never emitted"
+                    ).inc(s.lag_trimmed_tokens)
+        reg.gauge("serve_pipeline_overlap_fraction",
+                  "fraction of this run's rounds retired through the "
+                  "async pipeline").set(s.pipeline_overlap)
         reg.counter("serve_speculative_rounds_total",
                     "rounds that carried a speculative verify lane"
                     ).inc(s.spec_rounds)

@@ -231,13 +231,17 @@ class PagedKVPool:
         """Shrink the slot's allocation back to what ``n_tokens``
         positions need; returns how many pages were recycled.
 
-        The speculative-decode rollback: a verify step allocates pages
-        out to the full draft length, and when the model rejects a
-        suffix the tail pages hold only garbage K/V (already masked by
-        ``valid_len`` until real tokens overwrite those positions).
-        Tail pages were freshly allocated for positions past the live
-        prefix, so they are never prefix-cache-shared; release still
-        goes through the refcount for safety."""
+        The speculative-decode rollback — and the pipelined engine's
+        EOS-lag rollback, which is the same move: a verify step
+        allocates pages out to the full draft length (a pipelined round
+        allocates for the one token dispatched past an EOS that landed
+        during the readback lag), and when the model rejects a suffix
+        (or the EOS retires) the tail pages hold only garbage K/V
+        (already masked by ``valid_len`` until real tokens overwrite
+        those positions). Tail pages were freshly allocated for
+        positions past the live prefix, so they are never
+        prefix-cache-shared; release still goes through the refcount
+        for safety."""
         keep = pages_for(n_tokens, self.page)
         n = 0
         while len(self.slot_pages[slot]) > keep:

@@ -28,8 +28,11 @@ Contract
     f"req/{uid}")`` (:func:`request_key`), and the head folds the
     token's absolute position in per column. A token's key therefore
     depends only on ``(seed, uid, position)`` — never on batch layout —
-    so solo-lane vs batched rounds, preemption recompute, and
-    speculative re-verification all draw the same stream.
+    so solo-lane vs batched rounds, preemption recompute, speculative
+    re-verification, and the pipelined engine's on-device token carry
+    (``steps.carry_decode_tokens`` — the input token arrives as a device
+    array instead of a host re-upload, but the key folds from the same
+    absolute position) all draw the same stream.
   * **Logprobs** are the model-distribution log-softmax at the selected
     token (temperature-independent — the probability the MODEL assigned,
     the serving-API convention), for greedy and sampled lanes alike.

@@ -181,6 +181,19 @@ class FifoScheduler:
         self._round_budget -= n
         return n
 
+    def grant_decode(self, n_emitted: int, max_new: int, pos: int,
+                     max_len: int, lead: int = 0) -> bool:
+        """May a decode lane take one more token, ``lead`` tokens ahead
+        of its retired state? The pipelined engine grants round N+1
+        while round N's token is still in flight (``lead=1``): budget
+        (``max_new_tokens``) and capacity (``max_len``) finishes are
+        deterministic, so counting the in-flight token here means those
+        lanes are never overrun — only an EOS landing during the lag
+        computes one extra token, trimmed via ``PagedKVPool.trim``
+        exactly like a rejected speculative draft. ``lead=0`` is the
+        synchronous engine's termination test, pre-emit."""
+        return n_emitted + lead < max_new and pos + lead < max_len
+
     def next_admission(self, free_pages: int) -> Optional[Admission]:
         """Pop the queue head if a slot's first chunk can start now.
 

@@ -70,6 +70,16 @@ The unified step contract
   per-seat device round-trips collapse to at most one per round.
   ``page_copy``/``reset_state`` remain as the single-op forms.
 
+  **Device-resident token carry** — the step's selected-token output is
+  a device array with exactly the aval a ``C = 1`` dispatch consumes, so
+  a pipelined engine may feed round N's ``tok`` straight back in as
+  round N+1's ``tokens`` for pure-decode rounds
+  (:func:`carry_decode_tokens`) without a host round-trip; host-uploaded
+  tokens remain the path for prefill chunks, verify columns, and
+  admission. Dead lanes carry ``DEAD_TOKEN`` and are masked by
+  ``n_new = 0``, and the sampling keys fold from absolute positions
+  only, so carried and re-uploaded tokens are bitwise interchangeable.
+
   **Solo-lane fast path** — ``solo_step(params, tokens [1, C], arena,
   slot, start [1], n_new [1])`` runs a round with exactly one live lane
   at batch width 1: the slot's ``block_tbl``/SSM/conv rows are
@@ -341,6 +351,28 @@ def _step_cost_key(args, kw) -> str:
     return f"C{args[1].shape[1]}"
 
 
+def carry_decode_tokens(prev_tok, slot=None):
+    """Device-resident token carry for pipelined pure-decode rounds.
+
+    ``prev_tok`` is the previous step's on-device selected-token output
+    (``[B, 1]`` int32 from the batched step, ``[1, 1]`` from
+    ``solo_step``); the returned array feeds the NEXT dispatch's
+    ``tokens`` argument directly, so steady-state decode tokens never
+    round-trip through host. ``slot=None`` keeps the full batch (the
+    batched step reads its own lane rows; dead lanes carry
+    ``sampling.DEAD_TOKEN`` and are masked by ``n_new = 0``).
+    Passing ``slot`` slices lane ``slot``'s row out for a ``solo_step``
+    dispatch — a no-op when the previous round was itself solo (same
+    single live lane, the ``[1, 1]`` output passes straight through;
+    the engine drains the pipeline on any lane-set change, so the solo
+    lane's identity is stable while carried). Either way the result has
+    the same aval as the host-uploaded tokens of the matching width, so
+    the carry never adds a compiled shape."""
+    if slot is None or prev_tok.shape[0] == 1:
+        return prev_tok
+    return jax.lax.dynamic_slice_in_dim(prev_tok, int(slot), 1, axis=0)
+
+
 # ==========================================================================
 # paged serving step set (ServeEngine + launch/serve.py)
 # ==========================================================================
@@ -405,18 +437,20 @@ class PagedServeSteps:
 
 
 def width_ladder(chunk: int) -> tuple:
-    """Compiled ``C > 1`` step widths: pow2 rungs from 8 up to ``chunk``.
+    """Compiled ``C > 1`` step widths: pow2 rungs from 4 up to ``chunk``.
 
     A short prefill chunk — a cached-prefix suffix, a prompt tail —
     runs at the smallest rung that covers it instead of the full chunk:
     device time scales with the padded width, so the prefix cache's
     saved tokens only turn into saved wall clock if the step width
-    shrinks with them. The rung floor (8) and pow2 spacing bound the
-    compile surface to log2(chunk/8) + 2 shapes per engine geometry
-    (lru-shared across engines), so this stays a ladder, not a zoo."""
+    shrinks with them. The 4 rung exists for short speculative verify
+    steps (``1 + k`` columns at k < 7 used to pad all the way to 8);
+    the rung floor and pow2 spacing bound the compile surface to
+    log2(chunk/4) + 2 shapes per engine geometry (lru-shared across
+    engines), so this stays a ladder, not a zoo."""
     if chunk <= 1:
         return ()
-    w, out = 8, []
+    w, out = 4, []
     while w < chunk:
         out.append(w)
         w *= 2

@@ -264,6 +264,19 @@ def test_chunk_size_invariance_through_kernel(params):
 # step-shape bound: the compile surface is {1} + the pow2 width ladder
 # (steps.width_ladder), never an unbounded bucket zoo
 # -------------------------------------------------------------------------
+def test_width_ladder_pinned():
+    """The compiled-width set is pinned: pow2 rungs with a floor of 4 —
+    the sub-8 rung serves short speculative verify steps (1 + k columns
+    at k < 7 used to pad to 8) and short prefill tails alike."""
+    from repro.serve.steps import width_ladder
+    assert width_ladder(64) == (4, 8, 16, 32, 64)
+    assert width_ladder(16) == (4, 8, 16)
+    assert width_ladder(8) == (4, 8)
+    assert width_ladder(4) == (4,)
+    assert width_ladder(3) == (3,)
+    assert width_ladder(1) == ()
+
+
 def test_step_widths_bounded_to_ladder(params, monkeypatch):
     from repro.serve import steps as serve_steps
     chunk = 2 * PAGE

@@ -136,6 +136,31 @@ def test_solo_step_parity(serve_cfg, serve_params):
     assert streamed == out_s[0].out_tokens
 
 
+def test_solo_pipelined_parity(serve_cfg, serve_params):
+    """The B=1 solo lane participates in the device-token carry: a solo
+    pipelined run (carry is a passthrough — prev round's [1, C] output
+    feeds the next solo step directly) and a batched pipelined run
+    (legacy step set, carry slices the lane's row) both match the plain
+    sync solo run token for token."""
+    prompt = np.arange(2, 12, dtype=np.int32)
+    mk = lambda: [Request(uid=0, prompt=prompt, max_new_tokens=8)]
+    sync = _engine(serve_cfg, serve_params)
+    out_sync = sync.run(mk())
+    solo = _engine(serve_cfg, serve_params, pipelined=True)
+    out_solo = solo.run(mk())
+    batch = _engine(serve_cfg, serve_params, pipelined=True,
+                    step_set=_legacy_steps(serve_cfg))
+    out_batch = batch.run(mk())
+    assert out_sync[0].out_tokens == out_solo[0].out_tokens
+    assert out_sync[0].out_tokens == out_batch[0].out_tokens
+    assert solo.stats.solo_rounds > 0
+    assert solo.stats.pipelined_rounds > 0
+    assert batch.stats.solo_rounds == 0
+    assert batch.stats.pipelined_rounds > 0
+    _check_refcounts(solo)
+    _check_refcounts(batch)
+
+
 def test_weight_plan_parity(serve_cfg, serve_params):
     """The one-time exec-weight lowering is greedy-token-identical to
     per-call stream compute, and a dense tree passes through untouched."""

@@ -1,0 +1,220 @@
+"""The pipelined round loop (`serve/engine.py`, ``pipelined=True``).
+
+Pins the dispatch/retire pipeline contract from the engine's module
+docstring: pipelined decode is token-identical to the synchronous loop
+for greedy, sampled and speculative lanes across slot counts; an EOS
+landing during the one-round readback lag trims exactly the overrun
+token's pages (refcounts conserved, nothing past the EOS ever emitted);
+mutation rounds are barriers whose fused page-op flush dispatches only
+against retired state; cost attribution still sums to exactly one step
+dispatch per round; and retire-time emission timestamps keep
+TTFT/inter-token latencies sane."""
+import numpy as np
+import pytest
+
+from repro.obs import costs as obs_costs
+from repro.serve import steps as serve_steps
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import SamplingParams
+
+PAGE = 8
+MAX_LEN = 48
+
+
+def _reqs(n=6, max_new=6, seed=3, vocab=64, eos_id=None, sampling=None):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(2, vocab, int(u)).astype(np.int32),
+                    max_new_tokens=max_new, eos_id=eos_id,
+                    sampling=sampling)
+            for i, u in enumerate(rng.integers(4, 14, size=n))]
+
+
+def _engine(cfg, params, *, slots, **kw):
+    return ServeEngine(cfg, params, slots=slots, max_len=MAX_LEN,
+                       page_size=PAGE, **kw)
+
+
+def _pool_at_rest(eng):
+    pool = eng._pool
+    pool.check_tables()
+    held = 0
+    if eng.prefix_cache is not None:
+        eng.prefix_cache.check_invariants()
+        held = sum(1 for _ in eng.prefix_cache._nodes)
+    assert pool.free_count == pool.n_pages - held
+
+
+# ==========================================================================
+# token parity: pipelined == sync across lane types and slot counts
+# ==========================================================================
+@pytest.mark.parametrize("slots", [1, 4, 8])
+@pytest.mark.parametrize("lane", ["greedy", "sampled", "speculative"])
+def test_pipelined_token_parity(serve_cfg, serve_params, slots, lane):
+    kw = {}
+    sp = None
+    if lane == "sampled":
+        sp = SamplingParams(temperature=0.8, top_k=8, top_p=0.9, seed=11)
+    elif lane == "speculative":
+        kw["speculative_k"] = 3
+    sync = _engine(serve_cfg, serve_params, slots=slots, **kw)
+    out_s = sync.run(_reqs(sampling=sp))
+    pipe = _engine(serve_cfg, serve_params, slots=slots, pipelined=True,
+                   **kw)
+    out_p = pipe.run(_reqs(sampling=sp))
+    assert [r.out_tokens for r in out_s] == [r.out_tokens for r in out_p]
+    assert sync.stats.pipelined_rounds == 0
+    assert "round/retire" not in sync.stats.phase_seconds
+    if lane == "speculative":
+        # drafting needs retired host history: verify rounds never
+        # overlap (speculative greedy == greedy, so parity holds above)
+        assert pipe.stats.pipelined_rounds == 0
+    else:
+        assert pipe.stats.pipelined_rounds > 0
+        assert 0 < pipe.stats.pipeline_overlap <= 1
+        assert pipe.stats.phase_seconds.get("round/retire", 0) > 0
+        assert pipe.stats.phase_seconds.get("round/dispatch", 0) > 0
+    # tokens_out / emission bookkeeping unchanged by the pipeline
+    assert pipe.stats.tokens_out == sync.stats.tokens_out
+    _pool_at_rest(pipe)
+
+
+# ==========================================================================
+# EOS during the lag: exactly the overrun token trimmed, never emitted
+# ==========================================================================
+def _probe_eos(cfg, params, max_new=8):
+    """A token the greedy stream repeats mid-run — the first token whose
+    first occurrence lands in [2, 6), so an EOS cut happens while the
+    pipeline has a round in flight."""
+    probe = _engine(cfg, params, slots=1)
+    out = probe.run([Request(uid=0,
+                             prompt=np.arange(2, 12, dtype=np.int32),
+                             max_new_tokens=max_new)])
+    toks = out[0].out_tokens
+    for t in toks:
+        if 2 <= toks.index(t) < 6:
+            return t
+    pytest.skip("greedy stream has no mid-run token to use as EOS")
+
+
+@pytest.mark.parametrize("slots", [1, 4])
+def test_eos_during_lag_trims_overrun(serve_cfg, serve_params, slots):
+    eos = _probe_eos(serve_cfg, serve_params)
+    reqs = lambda: [Request(uid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                            max_new_tokens=8, eos_id=eos)]
+    sync = _engine(serve_cfg, serve_params, slots=slots)
+    out_s = sync.run(reqs())
+    pipe = _engine(serve_cfg, serve_params, slots=slots, pipelined=True)
+    out_p = pipe.run(reqs())
+    assert out_s[0].out_tokens == out_p[0].out_tokens
+    assert out_p[0].out_tokens[-1] == eos
+    # the single lane overran by exactly the one in-flight token —
+    # budget/capacity finishes are predicted at dispatch, only the EOS
+    # is not
+    assert pipe.stats.lag_trimmed_tokens == 1
+    assert pipe.stats.tokens_out == sync.stats.tokens_out
+    _pool_at_rest(pipe)
+
+
+def test_eos_during_lag_multi_lane(serve_cfg, serve_params):
+    """Several lanes cutting at EOS mid-flight: parity + a clean pool."""
+    eos = _probe_eos(serve_cfg, serve_params)
+    sync = _engine(serve_cfg, serve_params, slots=4)
+    out_s = sync.run(_reqs(max_new=8, eos_id=eos))
+    pipe = _engine(serve_cfg, serve_params, slots=4, pipelined=True)
+    out_p = pipe.run(_reqs(max_new=8, eos_id=eos))
+    assert [r.out_tokens for r in out_s] == [r.out_tokens for r in out_p]
+    _pool_at_rest(pipe)
+
+
+# ==========================================================================
+# barriers: mutation rounds drain first, flushes precede their step
+# ==========================================================================
+def test_barrier_rounds_flush_before_dispatch(serve_cfg, serve_params):
+    """With more requests than slots, admission rounds interleave with
+    pipelined decode. Every fused apply_page_ops flush must be followed
+    by the step dispatch it serviced before any further flush (the
+    flush-then-step pairing the sync engine guarantees), and the engine
+    must still both pipeline and barrier."""
+    calls = []
+    eng = _engine(serve_cfg, serve_params, slots=2, pipelined=True)
+    eng._ensure_pool()
+    for name in ("step", "solo_step", "apply_page_ops"):
+        real = getattr(eng._steps, name)
+
+        def spy(*a, _real=real, _n=name, **k):
+            calls.append("step" if _n != "apply_page_ops" else "flush")
+            return _real(*a, **k)
+
+        object.__setattr__(eng._steps, name, spy)
+    out_p = eng.run(_reqs(n=6, max_new=6))
+    sync = _engine(serve_cfg, serve_params, slots=2)
+    out_s = sync.run(_reqs(n=6, max_new=6))
+    assert [r.out_tokens for r in out_s] == [r.out_tokens for r in out_p]
+    assert eng.stats.pipelined_rounds > 0
+    assert eng.stats.pipeline_barriers > 0
+    for i, c in enumerate(calls):
+        if c == "flush":
+            assert i + 1 < len(calls) and calls[i + 1] == "step", \
+                f"flush at {i} not followed by its step: {calls}"
+    _pool_at_rest(eng)
+
+
+# ==========================================================================
+# cost attribution: still exactly one attributed step dispatch per round
+# ==========================================================================
+def test_pipelined_one_dispatch_per_round(serve_cfg, serve_params):
+    prev = obs_costs.enable_capture()
+    try:
+        eng = _engine(serve_cfg, serve_params, slots=4, pipelined=True)
+        eng.run(_reqs())
+    finally:
+        obs_costs.enable_capture(prev)
+    rep = eng.last_cost_report
+    assert rep is not None
+    step_rows = [r for r in rep.fns if r.fn in ("step", "solo_step")]
+    assert sum(r.calls for r in step_rows) == eng.stats.rounds
+    # capture mode makes step calls synchronous inside the wrapper; the
+    # loop degrades gracefully but still accounts one dispatch per round
+    assert rep.tokens_out == eng.stats.tokens_out
+
+
+# ==========================================================================
+# retire-time latency accounting
+# ==========================================================================
+def test_retire_time_latency_sane(serve_cfg, serve_params):
+    eng = _engine(serve_cfg, serve_params, slots=4, pipelined=True)
+    out = eng.run(_reqs())
+    s = eng.stats
+    assert len(s.ttft_s) == len(out)
+    assert all(t >= 0 for t in s.ttft_s)
+    assert all(g >= 0 for g in s.itl_s())
+    # every emission stamped: one timestamp per emitted token per uid
+    for r in out:
+        assert len(s.emit_times[r.uid]) == len(r.out_tokens)
+
+
+# ==========================================================================
+# device-token carry never adds a compiled shape
+# ==========================================================================
+def test_carry_adds_no_compiled_shapes(serve_cfg, serve_params):
+    eng = _engine(serve_cfg, serve_params, slots=4, pipelined=True)
+    eng._ensure_pool()
+    eng.run(_reqs())
+    first = eng.stats.jit_compiles
+    eng2 = _engine(serve_cfg, serve_params, slots=4, pipelined=True,
+                   step_set=eng._steps)
+    eng2.run(_reqs(seed=7))
+    assert eng2.stats.jit_compiles == 0, \
+        "pipelined carry retraced a warm step set"
+    assert eng2.stats.pipelined_rounds > 0
+    assert first >= 0
+    # and the carry helper's contract directly: slot slicing only when
+    # the previous round was batched
+    import jax.numpy as jnp
+    prev = jnp.arange(8, dtype=jnp.int32).reshape(4, 2)
+    assert serve_steps.carry_decode_tokens(prev, None) is prev
+    row = serve_steps.carry_decode_tokens(prev, 2)
+    assert row.shape == (1, 2) and int(row[0, 0]) == 4
+    solo_prev = prev[:1]
+    assert serve_steps.carry_decode_tokens(solo_prev, 3) is solo_prev
